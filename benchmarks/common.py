@@ -1,0 +1,37 @@
+"""Shared benchmark helpers: timing + the ``name,us_per_call,derived``
+CSV convention."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
+    """Median wall time in seconds (fn must block or return jax arrays)."""
+    for _ in range(warmup):
+        r = fn(*args, **kw)
+        _block(r)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn(*args, **kw)
+        _block(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), r
+
+
+def _block(r):
+    for leaf in jax.tree.leaves(r):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def header() -> None:
+    print("name,us_per_call,derived")

@@ -1,0 +1,42 @@
+"""Paper Figure 2: convergence vs data size (paper: n = 5k/20k/50k at
+d=512; CPU-scaled here).  Derived: iterations and seconds to reach 5% of
+the QP optimum -- the paper's point is that time grows ~linearly in n
+while QP grows ~quadratically."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.baselines import qp_nusvm
+from repro.core import preprocess as pp
+from repro.core import saddle
+from repro.data import synthetic
+
+ALPHA = 0.85
+
+
+def run(quick: bool = True) -> None:
+    sizes = [1000, 4000, 8000] if quick else [5000, 20000, 50000]
+    d = 64 if quick else 512
+    for n in sizes:
+        ds = synthetic.non_separable(n, d, beta2=0.2, seed=n)
+        xp = ds.x[ds.y > 0]
+        xm = ds.x[ds.y < 0]
+        nu = 1.0 / (ALPHA * min(len(xp), len(xm)))
+        pre = pp.preprocess(xp, xm, jax.random.key(0))
+        XP, XM = np.asarray(pre.xp), np.asarray(pre.xm)
+
+        t0 = time.perf_counter()
+        res = saddle.solve(XP, XM, eps=1e-3, beta=0.1, nu=nu,
+                           num_iters=8000, record_every=2000)
+        t = time.perf_counter() - t0
+        emit(f"fig2/saddle_n{n}", t, f"obj={res.history[-1][1]:.6f}")
+
+        t0 = time.perf_counter()
+        _, hist = qp_nusvm.solve(XP, XM, nu=nu, num_iters=1500)
+        t_qp = time.perf_counter() - t0
+        emit(f"fig2/qp_n{n}", t_qp, f"obj={hist[-1][1]:.6f}")

@@ -1,0 +1,43 @@
+"""Pallas kernels (interpret mode on CPU) vs the pure-jnp oracles:
+correctness is in tests/; this reports us_per_call for both paths.
+Note: interpret mode measures the *kernel logic* on CPU, not TPU perf --
+TPU numbers come from the roofline analysis."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ops, ref
+
+
+def run(quick: bool = True) -> None:
+    rng = np.random.default_rng(0)
+    n, d = (4096, 256) if quick else (65536, 1024)
+
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    t, _ = timeit(lambda: ops.fwht(x))
+    emit("kernels/fwht_pallas_interp", t, f"n={n};d={d}")
+    fref = jax.jit(ref.fwht_ref)
+    t, _ = timeit(lambda: fref(x))
+    emit("kernels/fwht_jnp_ref", t, "")
+
+    cols = jnp.asarray(rng.normal(size=(n, 1)), jnp.float32)
+    ll = jnp.asarray(np.log(np.ones(n) / n), jnp.float32)
+    u = jnp.zeros((n,), jnp.float32)
+    dw = jnp.asarray([0.01], jnp.float32)
+    t, _ = timeit(lambda: ops.mwu_update(cols, ll, u, dw, sign=1.0,
+                                         gamma=1e-3, tau=30.0,
+                                         d_eff=float(d)))
+    emit("kernels/mwu_update_pallas_interp", t, f"n={n}")
+
+    @jax.jit
+    def mwu_ref(cols, ll, u, dw):
+        log_new, u_new = ref.mwu_update_ref(cols, ll, u, dw, 1.0, 1e-3,
+                                            30.0, float(d))
+        return log_new - jax.scipy.special.logsumexp(log_new), u_new
+
+    t, _ = timeit(lambda: mwu_ref(cols, ll, u, dw))
+    emit("kernels/mwu_update_jnp_ref", t, "")

@@ -1,0 +1,46 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json).
+
+Emits one row per (arch x shape x mesh): the three roofline terms,
+the dominant bottleneck, and MODEL_FLOPS / HLO_FLOPs.  If the sweep has
+not been run, prints a pointer instead of failing."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def run(quick: bool = True) -> None:
+    # roofline-accurate unrolled artifacts first, then the scanned sweep
+    files = sorted(glob.glob("experiments/dryrun_unrolled/*.json")) + \
+        sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        emit("roofline/missing", 0.0,
+             "run: PYTHONPATH=src python -m repro.launch.dryrun "
+             "--both-meshes")
+        return
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        suffix = "_unrolled" if rec.get("unrolled") else ""
+        name = f"roofline/{rec['arch']}_{rec['shape']}_{rec['mesh']}" \
+            + suffix
+        if rec.get("error"):
+            emit(name, 0.0, f"ERROR={rec['error'][:60]}")
+            continue
+        if not rec.get("applicable", True):
+            emit(name, 0.0, "SKIP")
+            continue
+        step = max(rec["compute_s"], rec["memory_s"],
+                   rec["collective_s"])
+        emit(name, step,
+             f"bottleneck={rec['bottleneck']};"
+             f"compute_ms={rec['compute_s'] * 1e3:.2f};"
+             f"memory_ms={rec['memory_s'] * 1e3:.2f};"
+             f"collective_ms={rec['collective_s'] * 1e3:.2f};"
+             f"useful_flops_ratio={rec.get('useful_flops_ratio', 0):.3f}")

@@ -1,0 +1,52 @@
+"""Theorems 6 + 8 empirically: iterations-to-tolerance scale like
+sqrt(d / (eps * beta)) in d, and communication is O(k) per iteration
+independent of n, d."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import distributed as dist
+from repro.core import preprocess as pp
+from repro.core import saddle
+from repro.data import synthetic
+
+
+def _iters_to_tol(XP, XM, opt, tol=1.10, max_iters=30000):
+    res = saddle.solve(XP, XM, eps=1e-3, beta=0.1, num_iters=max_iters,
+                       record_every=500)
+    for it, obj in res.history:
+        if obj <= opt * tol + 1e-9:
+            return it
+    return max_iters
+
+
+def run(quick: bool = True) -> None:
+    from repro.baselines import qp_nusvm
+    n = 1500
+    dims = (16, 64, 256) if quick else (16, 64, 256, 1024)
+    iters = []
+    for d in dims:
+        ds = synthetic.separable(n, d, seed=d)
+        xp, xm = ds.x[ds.y > 0], ds.x[ds.y < 0]
+        pre = pp.preprocess(xp, xm, jax.random.key(0))
+        XP, XM = np.asarray(pre.xp), np.asarray(pre.xm)
+        _, hist = qp_nusvm.solve(XP, XM, nu=1.0, num_iters=3000)
+        it = _iters_to_tol(XP, XM, hist[-1][1])
+        iters.append(it)
+        emit(f"theory/iters_d{d}", 0.0, f"iters={it}")
+    # growth ratio between largest and smallest d vs sqrt scaling
+    pred = np.sqrt(dims[-1] / dims[0])
+    got = iters[-1] / max(iters[0], 1)
+    emit("theory/iter_growth", 0.0,
+         f"measured={got:.2f};sqrt_d_prediction={pred:.2f}")
+
+    # communication: scalars per iteration linear in k, flat in n and d
+    for k in (5, 10, 20):
+        c = dist.CommModel(k=k, nu_rounds_per_iter=0)
+        emit(f"theory/comm_k{k}", 0.0,
+             f"scalars_per_iter={c.scalars_per_iteration():.0f}")

@@ -1,0 +1,52 @@
+"""Saddle-DSVC (Algorithm 4): k=20 clients, with the paper's
+communication accounting -- and the comparison against distributed
+Gilbert (Liu et al.), reproducing the Figure 3 setup.
+
+    PYTHONPATH=src python examples/distributed_svm.py
+"""
+
+import jax
+import numpy as np
+
+from repro.baselines import dist_gilbert
+from repro.core import distributed as dist
+from repro.core import preprocess as pp
+from repro.data import synthetic
+
+K = 20
+
+
+def main() -> None:
+    ds = synthetic.separable(4000, 128, seed=0)
+    xp, xm = ds.x[ds.y > 0], ds.x[ds.y < 0]
+    pre = pp.preprocess(xp, xm, jax.random.key(0))
+    XP, XM = np.asarray(pre.xp), np.asarray(pre.xm)
+    unit = K * XP.shape[1]          # paper unit: k*d scalars
+
+    print(f"n={len(ds.y)} d=128 k={K}   (one comm unit = k*d scalars)")
+    print("== Saddle-DSVC (this paper: O(k) scalars/iteration) ==")
+    res = dist.solve_distributed(XP, XM, k=K, eps=1e-3, beta=0.1,
+                                 num_iters=8000, record_every=2000)
+    for it, comm, obj in res.history:
+        print(f"  iter {it:6d}  comm {comm / unit:8.1f} units   "
+              f"obj {obj:.6f}")
+
+    print("== distributed Gilbert (Liu et al.: O(kd)/iteration) ==")
+    st, hist, comm = dist_gilbert.solve(XP, XM, k=K, num_iters=2000,
+                                        record_every=500)
+    for it, c, obj in hist:
+        print(f"  iter {it:6d}  comm {c / unit:8.1f} units   "
+              f"obj {obj:.6f}")
+
+    # nu-SVM, the first practical distributed algorithm (paper claim)
+    print("== Saddle-DSVC nu-SVM ==")
+    nu = 1.0 / (0.85 * min(len(xp), len(xm)))
+    res = dist.solve_distributed(XP, XM, k=K, nu=nu, eps=1e-3, beta=0.1,
+                                 num_iters=6000, record_every=2000)
+    for it, comm, obj in res.history:
+        print(f"  iter {it:6d}  comm {comm / unit:8.1f} units   "
+              f"obj {obj:.6f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Serving walkthrough: batched prefill + decode with per-family caches.
+
+Shows the cache footprint difference between a full-KV dense arch, a
+sliding-window arch and a recurrent arch at the same history length --
+the long_500k story at example scale.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import transformer as tf
+from repro.serve import engine
+
+
+def cache_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache)
+               if hasattr(x, "size"))
+
+
+def main() -> None:
+    prompt_len, gen = 48, 16
+    for arch in ("gemma-7b", "h2o-danube-1.8b", "xlstm-125m",
+                 "recurrentgemma-2b"):
+        cfg = get_config(arch).reduced()
+        params = tf.init_lm(jax.random.key(0), cfg)
+        prompt = jax.random.randint(jax.random.key(1), (4, prompt_len),
+                                    0, cfg.vocab_size)
+        t0 = time.time()
+        st = engine.prefill(params, cfg, prompt,
+                            max_len=prompt_len + gen)
+        toks = engine.generate(params, cfg, prompt, steps=gen,
+                               temperature=0.8, seed=2)
+        dt = time.time() - t0
+        kb = cache_bytes(st.cache) / 1024
+        kinds = "/".join(sorted(set(cfg.block_pattern)))
+        print(f"{arch:20s} blocks={kinds:22s} cache {kb:9.1f} KiB "
+              f"({'ring' if cfg.window else 'full' if 'attn' in kinds else 'state'})  "
+              f"generated {toks.shape[1]} toks/seq x {toks.shape[0]} seqs "
+              f"in {dt:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Model-zoo training driver: train any --arch (reduced by default so it
+runs on this CPU container; pass --full on real hardware) for a few
+hundred steps on the synthetic token pipeline.
+
+    PYTHONPATH=src python examples/train_lm.py --arch xlstm-125m \
+        --steps 200 --batch 8 --seq 64
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.tokens import TokenPipeline
+from repro.models import transformer as tf
+from repro.train import checkpoint, optimizer as opt, steps
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="full (unreduced) config -- real hardware only")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=20,
+                           state_dtype=cfg.optimizer_state_dtype)
+    state = steps.init_train_state(jax.random.key(0), cfg, ocfg)
+    n_params = tf.count_params(state.params)
+    print(f"arch={cfg.name} params={n_params:,} "
+          f"steps={args.steps} batch={args.batch} seq={args.seq}")
+
+    pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch, seed=0)
+    train_step = jax.jit(steps.make_train_step(cfg, ocfg))
+
+    t0 = time.time()
+    for step in range(args.steps):
+        nb = pipe.next_batch()
+        batch = {"tokens": jnp.asarray(nb.tokens),
+                 "targets": jnp.asarray(nb.targets)}
+        if cfg.vision_embeds:
+            b, s = nb.tokens.shape
+            batch["vision_embeds"] = jnp.zeros((b, s, cfg.d_model))
+            batch["vision_mask"] = jnp.zeros((b, s), bool)
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None, None], (3, b, s))
+        if cfg.is_encoder_decoder:
+            batch["enc_frames"] = jnp.zeros(
+                (nb.tokens.shape[0], cfg.enc_frames, cfg.d_model))
+        state, metrics = train_step(state, batch)
+        if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
+            print(f"  step {step:5d}  loss {float(metrics['loss']):.4f}"
+                  f"  grad_norm {float(metrics['grad_norm']):.3f}"
+                  f"  ({(time.time() - t0):.1f}s)")
+    if args.ckpt:
+        checkpoint.save(args.ckpt, state.params)
+        print(f"checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Perf-iteration harness (EXPERIMENTS.md section Perf): lower+compile one
+# (arch x shape) with config overrides and report the roofline delta
+# against the unrolled baseline.
+#
+#   PYTHONPATH=src python scripts/hillclimb.py --arch deepseek-v2-lite-16b \
+#       --shape train_4k --tag zero2 --set fsdp_params=False
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import get_config                      # noqa: E402
+from repro.launch import specs as specs_mod               # noqa: E402
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+from repro.launch.shapes import SHAPES                    # noqa: E402
+from repro.utils import roofline as rl                    # noqa: E402
+
+
+def parse_value(v: str):
+    if v in ("True", "False"):
+        return v == "True"
+    try:
+        return int(v)
+    except ValueError:
+        pass
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg overrides key=value")
+    ap.add_argument("--layers-per-scan", type=int, default=0)
+    ap.add_argument("--out", default="experiments/hillclimb")
+    ap.add_argument("--top-collectives", type=int, default=0,
+                    help="print the N largest collective ops by shape")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_value(v)
+    if args.layers_per_scan:
+        overrides["block_pattern"] = (cfg.block_pattern
+                                      * args.layers_per_scan)
+    overrides["scan_layers"] = False        # roofline-accurate
+    cfg = dataclasses.replace(cfg, **overrides)
+
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=False)
+    t0 = time.time()
+    with mesh:
+        fn, fargs = specs_mod.build_lowerable(cfg, shape, mesh)
+        compiled = jax.jit(fn).lower(*fargs).compile()
+        roof = rl.analyze(compiled)
+        mem = compiled.memory_analysis()
+        if args.top_collectives:
+            import collections
+            import re as _re
+            from repro.utils.hlo_analysis import _shape_bytes
+            agg = collections.Counter()
+            for line in compiled.as_text().splitlines():
+                m = _re.match(
+                    r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+                    r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                    r"collective-permute)\(", line)
+                if m:
+                    mm = _re.search(r'op_name="([^"]{0,90})', line)
+                    where = mm.group(1) if mm else "?"
+                    agg[f"{m.group(2)} {m.group(1)[:48]} @ {where}"] += \
+                        _shape_bytes(m.group(1))
+            for k, v in agg.most_common(args.top_collectives):
+                print(f"  {v / 2**30:8.2f} GiB  {k}")
+    rec = {
+        "arch": args.arch, "shape": args.shape, "tag": args.tag,
+        "overrides": {k: str(v) for k, v in overrides.items()},
+        "compile_s": round(time.time() - t0, 1),
+        "compute_s": roof.compute_s, "memory_s": roof.memory_s,
+        "collective_s": roof.collective_s,
+        "collective_breakdown": roof.collectives.bytes_by_op,
+        "hlo_flops": roof.flops, "hlo_bytes": roof.hbm_bytes,
+        "arg_bytes": int(mem.argument_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+    }
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out,
+                        f"{args.arch}_{args.shape}_{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

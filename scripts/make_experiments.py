@@ -1,0 +1,86 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSON artifacts.
+
+    PYTHONPATH=src python scripts/make_experiments.py > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+SCAN_DIR = "experiments/dryrun"
+UNROLL_DIR = "experiments/dryrun_unrolled"
+
+
+def load(d):
+    recs = {}
+    for f in glob.glob(os.path.join(d, "*.json")):
+        with open(f) as fh:
+            r = json.load(fh)
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def main() -> None:
+    scanned = load(SCAN_DIR)
+    unrolled = load(UNROLL_DIR)
+
+    print("### Dry-run matrix (lower + compile, scanned layers)\n")
+    print("| arch | shape | mesh | status | args GiB/dev | "
+          "alloc GiB/dev (no-reuse UB) | compile s |")
+    print("|---|---|---|---|---|---|---|")
+    for key in sorted(scanned):
+        r = scanned[key]
+        if not r.get("applicable", True):
+            print(f"| {key[0]} | {key[1]} | {key[2]} | SKIP "
+                  f"({r['reason'][6:40]}...) | | | |")
+            continue
+        if r.get("error"):
+            print(f"| {key[0]} | {key[1]} | {key[2]} | **ERROR** | | | |")
+            continue
+        m = r["memory"]
+        print(f"| {key[0]} | {key[1]} | {key[2]} | OK | "
+              f"{fmt_bytes(m['argument_size_in_bytes'])} | "
+              f"{fmt_bytes(m['temp_size_in_bytes'])} | "
+              f"{r['compile_s']:.1f} |")
+
+    print("\n### Roofline (single-pod 16x16, layers unrolled)\n")
+    print("mem(meas) is the HLO bytes-accessed upper bound (the CPU "
+          "backend reports UNFUSED traffic); mem(adj) is the fused "
+          "lower bound 2 x resident-bytes / HBM_bw.  The bottleneck "
+          "column classifies with mem(adj) -- see EXPERIMENTS.md "
+          "methodology.\n")
+    print("| arch | shape | compute ms | mem(meas) ms | mem(adj) ms | "
+          "collective ms | bottleneck | useful/HLO flops | MFU bound |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    hbm = 819e9
+    for key in sorted(unrolled):
+        if key[2] != "16x16":
+            continue
+        r = unrolled[key]
+        if not r.get("applicable", True) or r.get("error"):
+            continue
+        args_b = r["memory"]["argument_size_in_bytes"]
+        mem_adj = 2.0 * args_b / hbm
+        terms = {"compute": r["compute_s"], "memory": mem_adj,
+                 "collective": r["collective_s"]}
+        bott = max(terms, key=terms.get)
+        step = max(terms.values())
+        mfu = (r.get("model_flops_per_device", 0.0)
+               / (step * 197e12)) if step else 0.0
+        print(f"| {key[0]} | {key[1]} | {r['compute_s'] * 1e3:.2f} | "
+              f"{r['memory_s'] * 1e3:.2f} | {mem_adj * 1e3:.2f} | "
+              f"{r['collective_s'] * 1e3:.2f} | {bott} | "
+              f"{r.get('useful_flops_ratio', 0):.3f} | "
+              f"{mfu * 100:.1f}% |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Baseline algorithms the paper compares against (all in JAX):
+
+gilbert        -- Gilbert algorithm for polytope distance (hard margin)
+mdm            -- Mitchell-Demyanov-Malozemov min-norm-point (related work)
+qp_nusvm       -- projected-gradient QP for RC-Hull (NuSVC stand-in)
+pegasos        -- primal SGD for C-SVM (LinearSVC stand-in)
+dist_gilbert   -- distributed Gilbert (Liu et al. 16) with comm counting
+hogwild        -- stale-gradient simulation of HOGWILD! (semantic port)
+"""

@@ -1,0 +1,99 @@
+"""Gilbert's algorithm [18] for the polytope distance / C-Hull problem,
+as analyzed for hard-margin SVM by Gartner & Jaggi [17].
+
+We seek the min-norm point of the Minkowski-difference polytope
+S = conv{x_i^+} (-) conv{x_j^-}.  Gilbert iterates:
+
+    z_t            current point (= A eta - B xi, weights maintained)
+    v_t            support vertex: argmin_{s in S} <z_t, s>
+                   = a_{i*} - b_{j*},  i* = argmin_i <z, a_i>,
+                                       j* = argmax_j <z, b_j>
+    z_{t+1}        nearest point to origin on segment [z_t, v_t]
+
+Each iteration is O(nd) (the two argext scans) -- the paper's stated
+O(nd / eps beta^2) total.  The convex weights (eta, xi) are carried so
+the SVM (w, b, margin) can be reported exactly like Saddle-SVC.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class GilbertState(NamedTuple):
+    z: jax.Array       # (d,) current point of S
+    eta: jax.Array     # (n1,)
+    xi: jax.Array      # (n2,)
+    t: jax.Array
+
+
+def init_state(xp: jax.Array, xm: jax.Array) -> GilbertState:
+    n1, n2 = xp.shape[0], xm.shape[0]
+    eta = jnp.zeros((n1,)).at[0].set(1.0)
+    xi = jnp.zeros((n2,)).at[0].set(1.0)
+    return GilbertState(z=xp[0] - xm[0], eta=eta, xi=xi,
+                        t=jnp.zeros((), jnp.int32))
+
+
+def gilbert_step(state: GilbertState, xp: jax.Array,
+                 xm: jax.Array) -> GilbertState:
+    z = state.z
+    sp = xp @ z                       # (n1,)
+    sm = xm @ z                       # (n2,)
+    i_star = jnp.argmin(sp)
+    j_star = jnp.argmax(sm)
+    v = xp[i_star] - xm[j_star]
+    dzv = z - v
+    denom = jnp.sum(dzv * dzv)
+    t_step = jnp.where(denom > 1e-30,
+                       jnp.clip(jnp.dot(z, dzv) / denom, 0.0, 1.0), 0.0)
+    z_new = (1.0 - t_step) * z + t_step * v
+    eta = (1.0 - t_step) * state.eta
+    eta = eta.at[i_star].add(t_step)
+    xi = (1.0 - t_step) * state.xi
+    xi = xi.at[j_star].add(t_step)
+    return GilbertState(z=z_new, eta=eta, xi=xi, t=state.t + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("num_steps",))
+def run_chunk(state: GilbertState, xp: jax.Array, xm: jax.Array,
+              num_steps: int) -> GilbertState:
+    def body(st, _):
+        return gilbert_step(st, xp, xm), None
+    state, _ = jax.lax.scan(body, state, None, length=num_steps)
+    return state
+
+
+class GilbertResult(NamedTuple):
+    state: GilbertState
+    history: list          # [(iter, objective)]
+
+
+def solve(xp, xm, *, num_iters: int = 1000, tol: float = 0.0,
+          record_every: int | None = None) -> GilbertResult:
+    xp = jnp.asarray(xp, jnp.float32)
+    xm = jnp.asarray(xm, jnp.float32)
+    state = init_state(xp, xm)
+    chunk = record_every or num_iters
+    history = []
+    done = 0
+    prev_obj = np.inf
+    while done < num_iters:
+        ns = min(chunk, num_iters - done)
+        state = run_chunk(state, xp, xm, ns)
+        done += ns
+        obj = float(0.5 * jnp.sum(state.z ** 2))
+        history.append((done, obj))
+        if tol > 0.0 and prev_obj - obj < tol:
+            break
+        prev_obj = obj
+    return GilbertResult(state=state, history=history)
+
+
+def objective(state: GilbertState) -> float:
+    return float(0.5 * jnp.sum(state.z ** 2))

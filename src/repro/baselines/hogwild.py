@@ -1,0 +1,94 @@
+"""HOGWILD!-style [37] asynchronous SGD for C-SVM -- semantic port.
+
+True HOGWILD! relies on lock-free shared-memory races between CPU
+threads; XLA/TPU has no analogue (DESIGN.md assumption log #5).  We
+implement the standard *stale-gradient simulation*: k workers each
+compute a hinge-loss gradient against a parameter snapshot that is
+``staleness`` updates old, and the server applies the k updates
+sequentially.  Communication per round: each worker ships a gradient
+(d scalars) and reads w back (d scalars) -> 2kd scalars, the quantity
+plotted against Saddle-DSVC's O(k) in Figure 6.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class HogwildState(NamedTuple):
+    w: jax.Array          # (d,) current
+    w_stale: jax.Array    # (d,) snapshot workers read
+    b: jax.Array
+    t: jax.Array
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lam", "batch", "k", "num_steps",
+                                    "staleness"))
+def run_chunk(state, key, x, y, lam: float, batch: int, k: int,
+              staleness: int, num_steps: int):
+    n = x.shape[0]
+
+    def body(st, kk):
+        # k workers compute gradients against the stale snapshot
+        idx = jax.random.randint(kk, (k, batch), 0, n)
+        xb = x[idx]                       # (k, batch, d)
+        yb = y[idx]
+        margin = yb * (jnp.einsum("kbd,d->kb", xb, st.w_stale) - st.b)
+        viol = (margin < 1.0).astype(jnp.float32)
+        gw = lam * st.w_stale - jnp.einsum("kb,kbd->kd", viol * yb,
+                                           xb) / batch
+        gb = jnp.sum(viol * yb, axis=1) / batch
+        step = 1.0 / (lam * (st.t + 1.0))
+        # server applies the k updates sequentially (sum)
+        w = st.w - step * jnp.sum(gw, axis=0) / k
+        b = st.b - step * jnp.sum(gb) / k
+        # snapshot refresh every `staleness` rounds
+        refresh = (jnp.mod(st.t, staleness) == staleness - 1)
+        w_stale = jnp.where(refresh, w, st.w_stale)
+        return HogwildState(w, w_stale, b, st.t + 1.0), None
+
+    keys = jax.random.split(key, num_steps)
+    state, _ = jax.lax.scan(body, state, keys)
+    return state
+
+
+class CommModel(NamedTuple):
+    k: int
+    d: int
+
+    def scalars_per_iteration(self) -> float:
+        return 2.0 * self.k * self.d
+
+    def total(self, iters: int) -> float:
+        return self.scalars_per_iteration() * iters
+
+
+def solve(x, y, *, k: int = 20, lam: float = 1e-3, batch: int = 8,
+          staleness: int = 4, num_iters: int = 2000, seed: int = 0,
+          record_every: int | None = None):
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    d = x.shape[1]
+    state = HogwildState(jnp.zeros((d,)), jnp.zeros((d,)), jnp.zeros(()),
+                         jnp.zeros(()))
+    comm = CommModel(k=k, d=d)
+    key = jax.random.key(seed)
+    history = []
+    chunk = record_every or num_iters
+    done = 0
+    while done < num_iters:
+        key, sub = jax.random.split(key)
+        ns = min(chunk, num_iters - done)
+        state = run_chunk(state, sub, x, y, float(lam), batch, k,
+                          staleness, ns)
+        done += ns
+        margin = y * (x @ state.w - state.b)
+        acc = float(jnp.mean((margin > 0).astype(jnp.float32)))
+        history.append((done, comm.total(done), acc))
+    return state, history, comm

@@ -1,0 +1,78 @@
+"""Pegasos [39]: primal stochastic sub-gradient solver for C-SVM
+(hinge loss + l2), the LinearSVC / primal-SGD stand-in.
+
+    min_w  lambda/2 ||w||^2 + (1/n) sum_i max(0, 1 - y_i w.x_i)
+
+Mini-batch variant with the 1/(lambda t) step size and the optional
+1/sqrt(lambda) ball projection from the paper.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PegasosState(NamedTuple):
+    w: jax.Array
+    b: jax.Array
+    t: jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "batch", "num_steps"))
+def run_chunk(state: PegasosState, key: jax.Array, x: jax.Array,
+              y: jax.Array, lam: float, batch: int,
+              num_steps: int) -> PegasosState:
+    n = x.shape[0]
+
+    def body(st, k):
+        idx = jax.random.randint(k, (batch,), 0, n)
+        xb, yb = x[idx], y[idx]
+        margin = yb * (xb @ st.w - st.b)
+        viol = (margin < 1.0).astype(jnp.float32)
+        step = 1.0 / (lam * (st.t + 1.0))
+        grad_w = lam * st.w - (viol * yb) @ xb / batch
+        grad_b = jnp.sum(viol * yb) / batch
+        w = st.w - step * grad_w
+        b = st.b - step * grad_b
+        # optional projection onto the 1/sqrt(lam) ball
+        norm = jnp.linalg.norm(w)
+        w = w * jnp.minimum(1.0, 1.0 / (jnp.sqrt(lam) * norm + 1e-30))
+        return PegasosState(w, b, st.t + 1.0), None
+
+    keys = jax.random.split(key, num_steps)
+    state, _ = jax.lax.scan(body, state, keys)
+    return state
+
+
+def solve(x, y, *, lam: float = 1e-3, batch: int = 32,
+          num_iters: int = 2000, seed: int = 0,
+          record_every: int | None = None):
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    d = x.shape[1]
+    state = PegasosState(jnp.zeros((d,)), jnp.zeros(()), jnp.zeros(()))
+    key = jax.random.key(seed)
+    history = []
+    chunk = record_every or num_iters
+    done = 0
+    while done < num_iters:
+        key, sub = jax.random.split(key)
+        ns = min(chunk, num_iters - done)
+        state = run_chunk(state, sub, x, y, float(lam), batch, ns)
+        done += ns
+        margin = y * (x @ state.w - state.b)
+        obj = float(0.5 * lam * jnp.sum(state.w ** 2)
+                    + jnp.mean(jnp.maximum(0.0, 1.0 - margin)))
+        acc = float(jnp.mean((margin > 0).astype(jnp.float32)))
+        history.append((done, obj, acc))
+    return state, history
+
+
+def predict(state: PegasosState, x) -> np.ndarray:
+    s = np.asarray(jnp.asarray(x, jnp.float32) @ state.w - state.b)
+    return np.where(s >= 0, 1, -1)

@@ -1,0 +1,7 @@
+"""Architecture configs.  ``get_config(name)`` resolves any assigned
+architecture id (plus variants) to a ModelConfig."""
+
+from repro.configs.base import (ModelConfig, get_config, list_configs,
+                                register)
+
+__all__ = ["ModelConfig", "get_config", "list_configs", "register"]

@@ -1,0 +1,315 @@
+"""Saddle-DSVC (Section 4 / Algorithm 4): the distributed solver.
+
+The paper's server/clients protocol maps onto JAX collectives:
+
+  round 1  server broadcasts i*; clients send partial delta+-    -> psum
+  round 2  server broadcasts summed delta+-; clients update w,
+           eta, xi locally and send partial normalizers Z+-      -> psum
+  round 3  server broadcasts Z+-; clients normalize               (local)
+  round 4  (nu-Saddle only) repeat: clients send partial
+           varsigma+-, Omega+-; server broadcasts sums            -> psum
+           until varsigma == 0  (at most ceil(1/nu) rounds)
+
+Every "send partials / broadcast sum" pair is exactly one all-reduce of
+O(1) scalars over the client axis, so the whole protocol is a handful of
+scalar ``lax.psum``s per iteration -- the TPU-native realization of the
+O(k) communication bound (Theorem 8).
+
+The SAME step function runs in two modes:
+  * ``shard_map`` over a real mesh axis (multi-device / dry-run), or
+  * ``jax.vmap(..., axis_name=CLIENT_AXIS)`` over a stacked (k, n/k, ...)
+    state -- a bit-exact single-device simulation of k clients (psum is
+    supported under vmap's axis_name), used for the paper's k=20
+    experiments on this host.
+
+Both produce the SAME iterates as serial Saddle-SVC (tested), because
+summing per-client partial dot products/normalizers is exact.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import saddle
+from repro.core.saddle import SaddleParams
+
+CLIENT_AXIS = "clients"
+NEG_INF = -1e30     # log-weight of padding points (exp() == 0 exactly)
+
+
+class ShardedState(NamedTuple):
+    """Per-client slice of the solver state.  Leading axis (under vmap)
+    or shard axis (under shard_map) is the client."""
+    w: jax.Array            # (d,) -- every client keeps the same w
+    log_eta: jax.Array      # (n1/k,)
+    log_eta_prev: jax.Array
+    log_xi: jax.Array       # (n2/k,)
+    log_xi_prev: jax.Array
+    u_p: jax.Array
+    u_m: jax.Array
+    t: jax.Array
+
+
+class CommModel(NamedTuple):
+    """Analytic communication accounting for Algorithm 4 (scalar counts,
+    matching the paper's convention of counting numbers exchanged)."""
+    k: int
+    nu_rounds_per_iter: float   # 0 for HM-Saddle
+
+    def scalars_per_iteration(self) -> float:
+        k = self.k
+        # round 1: broadcast i* (k) + 2 scalars up from each client (2k)
+        # round 2: broadcast 2 (2k) + Z's up (2k)
+        # round 3: broadcast Z's (2k)
+        base = k + 2 * k + 2 * k + 2 * k + 2 * k
+        # each nu projection round: 4 scalars up (4k) + 4 down (4k)
+        return base + self.nu_rounds_per_iter * 8 * k
+
+    def total(self, iters: int) -> float:
+        return self.scalars_per_iteration() * iters
+
+
+def _dist_entropy_prox(log_lam, v, gamma, tau, d_eff):
+    """Entropy prox with a DISTRIBUTED normalizer (round 2-3: local sums
+    psum'd across clients -- log-space for stability)."""
+    c = 1.0 / (gamma + d_eff / tau)
+    log_new = c * ((d_eff / tau) * log_lam - v)
+    # local logsumexp -> global via psum of exp-shifted sums
+    local_max = jnp.max(log_new)
+    global_max = jax.lax.pmax(local_max, CLIENT_AXIS)
+    local_sum = jnp.sum(jnp.exp(log_new - global_max))
+    global_sum = jax.lax.psum(local_sum, CLIENT_AXIS)
+    return log_new - (global_max + jnp.log(global_sum))
+
+
+def _dist_capped_project(log_eta, nu, max_rounds):
+    """Round 4 of Algorithm 4: the distributed Rule-3 projection.  All
+    clients iterate on psum'd (varsigma, Omega) until varsigma == 0."""
+    def cond(state):
+        eta, it = state
+        varsig = jax.lax.psum(
+            jnp.sum(jnp.where(eta > nu, eta - nu, 0.0)), CLIENT_AXIS)
+        return (varsig > 1e-12) & (it < max_rounds)
+
+    def body(state):
+        eta, it = state
+        varsig = jax.lax.psum(
+            jnp.sum(jnp.where(eta > nu, eta - nu, 0.0)), CLIENT_AXIS)
+        omega = jax.lax.psum(
+            jnp.sum(jnp.where(eta < nu, eta, 0.0)), CLIENT_AXIS)
+        eta = jnp.where(eta >= nu, nu,
+                        eta * (1.0 + varsig / jnp.maximum(omega, 1e-30)))
+        return eta, it + 1
+
+    eta = jnp.exp(log_eta)
+    eta, _ = jax.lax.while_loop(cond, body, (eta, jnp.array(0, jnp.int32)))
+    return jnp.where(eta > 0, jnp.log(jnp.maximum(eta, 1e-38)), NEG_INF)
+
+
+def dsvc_step(state: ShardedState, key: jax.Array, xp: jax.Array,
+              xm: jax.Array, p: SaddleParams) -> ShardedState:
+    """One Algorithm-4 iteration from a single client's viewpoint.
+    ``xp``/``xm`` are the client's local (m1, d)/(m2, d) slices.  The key
+    is identical across clients (server broadcasts i*)."""
+    d, b = p.d, p.block_size
+    d_eff = d / b
+    idx = jax.random.randint(key, (b,), 0, d)
+    cols_p = xp[:, idx]
+    cols_m = xm[:, idx]
+
+    eta = jnp.exp(state.log_eta)
+    eta_prev = jnp.exp(state.log_eta_prev)
+    xi = jnp.exp(state.log_xi)
+    xi_prev = jnp.exp(state.log_xi_prev)
+
+    # Round 1: partial dot products, all-reduced (C.delta -> S.delta).
+    mom_eta = eta + p.theta * (eta - eta_prev)
+    mom_xi = xi + p.theta * (xi - xi_prev)
+    delta_p = jax.lax.psum(cols_p.T @ mom_eta, CLIENT_AXIS)
+    delta_m = jax.lax.psum(cols_m.T @ mom_xi, CLIENT_AXIS)
+
+    # Round 2: every client performs the identical w update.
+    w_old = state.w[idx]
+    w_new = (w_old + p.sigma * (delta_p - delta_m)) / (p.sigma + 1.0)
+    dw = w_new - w_old
+
+    dv_p = cols_p @ dw
+    dv_m = cols_m @ dw
+    v_p = state.u_p + d_eff * dv_p
+    v_m = state.u_m + d_eff * dv_m
+
+    # Rounds 2-3: MWU update with distributed normalizer.
+    log_eta_new = _dist_entropy_prox(state.log_eta, v_p, p.gamma, p.tau, d_eff)
+    log_xi_new = _dist_entropy_prox(state.log_xi, -v_m, p.gamma, p.tau, d_eff)
+
+    # Round 4 (nu-Saddle): distributed capped-simplex projection.
+    if p.nu > 0.0:
+        max_rounds = int(1.0 / p.nu) + 2
+        log_eta_new = _dist_capped_project(log_eta_new, p.nu, max_rounds)
+        log_xi_new = _dist_capped_project(log_xi_new, p.nu, max_rounds)
+
+    return ShardedState(
+        w=state.w.at[idx].set(w_new),
+        log_eta=log_eta_new, log_eta_prev=state.log_eta,
+        log_xi=log_xi_new, log_xi_prev=state.log_xi,
+        u_p=state.u_p + dv_p, u_m=state.u_m + dv_m,
+        t=state.t + 1,
+    )
+
+
+def shard_points(x: np.ndarray, k: int):
+    """Round-robin partition of n points into k equal shards (padded with
+    zero points whose log-weight is NEG_INF).  Returns (k, m, d) array and
+    (k, m) validity mask."""
+    n, d = x.shape
+    m = -(-n // k)
+    pad = k * m - n
+    xpad = np.concatenate([x, np.zeros((pad, d), x.dtype)], 0)
+    mask = np.concatenate([np.ones(n, bool), np.zeros(pad, bool)])
+    order = np.arange(k * m).reshape(m, k).T.reshape(-1)   # round robin
+    return xpad[order].reshape(k, m, d), mask[order].reshape(k, m)
+
+
+def init_sharded_state(n1: int, n2: int, d: int, mask_p: np.ndarray,
+                       mask_m: np.ndarray) -> ShardedState:
+    """Stacked (k, ...) client states; padding points get NEG_INF."""
+    k, m1 = mask_p.shape
+    m2 = mask_m.shape[1]
+    log_eta = jnp.where(jnp.asarray(mask_p), -math.log(n1), NEG_INF)
+    log_xi = jnp.where(jnp.asarray(mask_m), -math.log(n2), NEG_INF)
+    zeros = jnp.zeros((k, d), jnp.float32)
+    return ShardedState(
+        w=zeros,
+        log_eta=log_eta.astype(jnp.float32),
+        log_eta_prev=log_eta.astype(jnp.float32),
+        log_xi=log_xi.astype(jnp.float32),
+        log_xi_prev=log_xi.astype(jnp.float32),
+        u_p=jnp.zeros((k, m1), jnp.float32),
+        u_m=jnp.zeros((k, m2), jnp.float32),
+        t=jnp.zeros((k,), jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("params", "num_steps"))
+def run_chunk_sim(state: ShardedState, key: jax.Array, xp: jax.Array,
+                  xm: jax.Array, params: SaddleParams,
+                  num_steps: int) -> ShardedState:
+    """Single-device simulation: vmap over the stacked client axis."""
+
+    def one_client_scan(st, xp_c, xm_c, keys):
+        def body(s, kk):
+            return dsvc_step(s, kk, xp_c, xm_c, params), None
+        out, _ = jax.lax.scan(body, st, keys)
+        return out
+
+    keys = jax.random.split(key, num_steps)   # identical for all clients
+    return jax.vmap(one_client_scan, in_axes=(0, 0, 0, None),
+                    axis_name=CLIENT_AXIS)(state, xp, xm, keys)
+
+
+def make_sharded_runner(mesh: jax.sharding.Mesh, axis: str = CLIENT_AXIS):
+    """shard_map runner for a real device mesh: the production path used
+    by the multi-pod dry-run (clients = the mesh 'data' axis)."""
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    def run(state, key, xp, xm, params, num_steps):
+        def client_fn(st, xp_c, xm_c):
+            st = jax.tree.map(lambda a: a[0], st)        # drop shard dim
+            xp_c, xm_c = xp_c[0], xm_c[0]
+            keys = jax.random.split(key, num_steps)
+            def body(s, kk):
+                return dsvc_step(s, kk, xp_c, xm_c, params), None
+            out, _ = jax.lax.scan(body, st, keys)
+            return jax.tree.map(lambda a: a[None], out)
+
+        spec = P(axis)
+        fn = shard_map(client_fn, mesh=mesh,
+                       in_specs=(spec, spec, spec), out_specs=spec,
+                       check_rep=False)
+        return fn(state, xp, xm)
+
+    return run
+
+
+class DistSolveResult(NamedTuple):
+    state: ShardedState
+    history: list
+    comm: CommModel
+    scalars_sent: float
+
+
+def solve_distributed(xp: np.ndarray, xm: np.ndarray, *, k: int = 20,
+                      eps: float = 1e-3, beta: float = 0.1, nu: float = 0.0,
+                      num_iters: int | None = None, block_size: int = 1,
+                      seed: int = 0, record_every: int | None = None,
+                      mesh: jax.sharding.Mesh | None = None
+                      ) -> DistSolveResult:
+    """Run Saddle-DSVC with k clients (simulation unless a mesh is given).
+
+    Data must already be preprocessed (Algorithm 3 runs WD per client with
+    the same shared D -- equivalent to transforming up front)."""
+    xp = np.asarray(xp, np.float32)
+    xm = np.asarray(xm, np.float32)
+    n1, d = xp.shape
+    n2 = xm.shape[0]
+    params = saddle.make_params(n1 + n2, d, eps, beta, nu=nu,
+                                block_size=block_size)
+    if num_iters is None:
+        num_iters = saddle.default_iterations(d, eps, beta, n1 + n2)
+    num_iters = max(1, num_iters // block_size)
+
+    xp_sh, mask_p = shard_points(xp, k)
+    xm_sh, mask_m = shard_points(xm, k)
+    state = init_sharded_state(n1, n2, d, mask_p, mask_m)
+    xp_sh = jnp.asarray(xp_sh)
+    xm_sh = jnp.asarray(xm_sh)
+
+    if mesh is not None:
+        runner = make_sharded_runner(mesh)
+        run = lambda st, kk, ns: runner(st, kk, xp_sh, xm_sh, params, ns)
+    else:
+        run = lambda st, kk, ns: run_chunk_sim(st, kk, xp_sh, xm_sh,
+                                               params, ns)
+
+    # expected projection rounds per iteration (<= 1/nu; typically 1-2)
+    nu_rounds = 2.0 if nu > 0 else 0.0
+    comm = CommModel(k=k, nu_rounds_per_iter=nu_rounds)
+
+    key = jax.random.key(seed)
+    chunk = record_every or num_iters
+    history = []
+    done = 0
+    while done < num_iters:
+        key, sub = jax.random.split(key)
+        ns = min(chunk, num_iters - done)
+        state = run(state, sub, ns)
+        done += ns
+        obj = float(distributed_objective(state, xp_sh, xm_sh))
+        history.append((done, comm.total(done), obj))
+    return DistSolveResult(state=state, history=history, comm=comm,
+                           scalars_sent=comm.total(num_iters))
+
+
+def distributed_objective(state: ShardedState, xp_sh, xm_sh) -> jax.Array:
+    """0.5 || A eta - B xi ||^2 from the stacked client state."""
+    eta = jnp.exp(state.log_eta)       # (k, m1)
+    xi = jnp.exp(state.log_xi)
+    diff = jnp.einsum("km,kmd->d", eta, xp_sh) - \
+        jnp.einsum("km,kmd->d", xi, xm_sh)
+    return 0.5 * jnp.sum(diff * diff)
+
+
+def gather_duals(state: ShardedState, n1: int, n2: int, k: int):
+    """Undo the round-robin sharding; returns (eta, xi) of length n1, n2."""
+    def unshard(log_v, n):
+        k_, m = log_v.shape
+        flat = np.asarray(log_v).T.reshape(-1)   # inverse of round robin
+        return np.exp(flat[:n])
+    return unshard(state.log_eta, n1), unshard(state.log_xi, n2)

@@ -1,0 +1,116 @@
+"""Pre-processing for Saddle-SVC (Algorithm 1 of the paper).
+
+Steps:
+  1. scale all points by 1/max_i ||x_i||  (footnote 3),
+  2. apply the randomized Walsh--Hadamard transform ``WD`` so that with
+     high probability every coordinate of every point is
+     O(sqrt(log n / d))  -- this makes uniform coordinate sampling in
+     Algorithm 2 effective.
+
+``W`` is the (normalized) d x d Walsh--Hadamard matrix and ``D`` a random
++-1 diagonal.  We use the *normalized* transform (W W^T = I) so the map
+is orthonormal: optima are preserved exactly and ``w`` can be mapped back
+by the inverse transform.  Dimensions that are not a power of two are
+zero-padded (see DESIGN.md assumption log #3).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def next_pow2(d: int) -> int:
+    p = 1
+    while p < d:
+        p *= 2
+    return p
+
+
+def fwht(x: jax.Array, *, normalize: bool = True) -> jax.Array:
+    """Fast Walsh--Hadamard transform along the LAST axis (pure jnp).
+
+    The last axis length must be a power of two.  O(d log d) butterflies
+    implemented with reshapes; used as the reference implementation (the
+    Pallas kernel in ``repro.kernels.fwht`` is benchmarked against it).
+    """
+    d = x.shape[-1]
+    if d & (d - 1):
+        raise ValueError(f"fwht needs a power-of-two axis, got {d}")
+    orig_shape = x.shape
+    x = x.reshape(-1, d)
+    h = 1
+    while h < d:
+        x = x.reshape(-1, d // (2 * h), 2, h)
+        a = x[..., 0, :]
+        b = x[..., 1, :]
+        x = jnp.stack([a + b, a - b], axis=-2)
+        x = x.reshape(-1, d)
+        h *= 2
+    if normalize:
+        x = x / jnp.sqrt(jnp.asarray(d, x.dtype))
+    return x.reshape(orig_shape)
+
+
+class Preprocessed(NamedTuple):
+    """Output of :func:`preprocess` -- the transformed problem."""
+
+    xp: jax.Array        # (n1, d_pad) transformed +1 points (rows)
+    xm: jax.Array        # (n2, d_pad) transformed -1 points (rows)
+    signs: jax.Array     # (d_pad,) the +-1 diagonal of D
+    scale: jax.Array     # scalar: 1 / max ||x_i||
+    d_orig: int          # original dimensionality before padding
+
+
+def hadamard_transform(x: jax.Array, signs: jax.Array) -> jax.Array:
+    """Apply ``W D`` to rows of ``x`` (already padded to len(signs))."""
+    return fwht(x * signs[None, :])
+
+
+def inverse_hadamard_transform(v: jax.Array, signs: jax.Array) -> jax.Array:
+    """Apply ``(W D)^-1 = D W^T`` to a vector in transformed space."""
+    return fwht(v) * signs
+
+
+@functools.partial(jax.jit, static_argnames=("d_pad",))
+def _transform(xp, xm, signs, d_pad):
+    def pad(x):
+        return jnp.pad(x, ((0, 0), (0, d_pad - x.shape[1])))
+
+    xp, xm = pad(xp), pad(xm)
+    norms = jnp.concatenate(
+        [jnp.linalg.norm(xp, axis=1), jnp.linalg.norm(xm, axis=1)]
+    )
+    scale = 1.0 / jnp.maximum(jnp.max(norms), 1e-30)
+    return (
+        hadamard_transform(xp * scale, signs),
+        hadamard_transform(xm * scale, signs),
+        scale,
+    )
+
+
+def preprocess(xp: np.ndarray | jax.Array, xm: np.ndarray | jax.Array,
+               key: jax.Array) -> Preprocessed:
+    """Algorithm 1: scale to the unit ball and apply the WD transform."""
+    xp = jnp.asarray(xp, jnp.float32)
+    xm = jnp.asarray(xm, jnp.float32)
+    d = xp.shape[1]
+    assert xm.shape[1] == d, "class matrices must share dimensionality"
+    d_pad = next_pow2(d)
+    signs = jax.random.rademacher(key, (d_pad,), dtype=jnp.float32)
+    txp, txm, scale = _transform(xp, xm, signs, d_pad)
+    return Preprocessed(xp=txp, xm=txm, signs=signs, scale=scale, d_orig=d)
+
+
+def recover_direction(w: jax.Array, pre: Preprocessed) -> jax.Array:
+    """Map a direction from transformed space back to the input space.
+
+    Predictions on raw points x use sign(w_orig . x - b_orig); the
+    orthonormal transform gives w_orig = scale * (WD)^T w.
+    """
+    w_orig = inverse_hadamard_transform(w, pre.signs)[: pre.d_orig]
+    return w_orig * pre.scale

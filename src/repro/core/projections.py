@@ -1,0 +1,99 @@
+"""Projection / proximal steps for HM-Saddle and nu-Saddle.
+
+Implements the paper's explicit update rules:
+
+* :func:`entropy_prox` -- the closed form of Lemma 10: the entropy-prox
+  (multiplicative-weights) step on the simplex,
+      eta_i  propto  exp{ (gamma + d/tau)^-1 ( (d/tau) log eta_i[t] - v_i ) }
+  where v_i = <w[t] + d(w[t+1]-w[t]), X_{.i}>.  Computed in log space.
+
+* :func:`capped_simplex_project_sorted` -- Rule 2 of Lemma 11: the
+  O(n log n) sort-based projection onto D = {eta : ||eta||_1 = 1,
+  0 <= eta_i <= nu} that preserves the entropy-prox KKT structure
+  (clamp the top block to nu, scale the rest by 1 + sigma/Omega).
+
+* :func:`capped_simplex_project_loop` -- Rule 3: the O(n/nu) iterative
+  water-filling loop (used as an oracle and for tiny 1/nu).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def entropy_prox(log_lam: jax.Array, v: jax.Array, gamma: float | jax.Array,
+                 tau: float | jax.Array, d: int | jax.Array) -> jax.Array:
+    """One MWU step; returns *normalized* log-weights on the simplex."""
+    c = 1.0 / (gamma + d / tau)
+    log_new = c * ((d / tau) * log_lam - v)
+    return log_new - jax.scipy.special.logsumexp(log_new)
+
+
+def capped_simplex_project_sorted(eta: jax.Array, nu: float) -> jax.Array:
+    """Rule 2 (Lemma 11): sorted projection onto the capped simplex.
+
+    Finds the largest index i* (in ascending sorted order) such that
+      varsigma_{i*} = sum_{j >= i*} (eta_j - nu) >= 0   and
+      eta_{i*-1} (1 + varsigma_{i*}/Omega_{i*}) < nu,  Omega_{i*} = sum_{j<i*} eta_j,
+    then clamps entries >= i* to nu and scales the rest.
+    Fully vectorized: one sort + prefix sums + argmax.
+    """
+    n = eta.shape[0]
+    order = jnp.argsort(eta)
+    s = eta[order]                                    # ascending
+    total = jnp.sum(s)
+    prefix = jnp.cumsum(s)                            # prefix[i] = sum_{j<=i}
+    omega = prefix - s                                # Omega_i = sum_{j<i}
+    suffix = total - omega                            # sum_{j>=i}
+    idx = jnp.arange(n)
+    varsig = suffix - nu * (n - idx)                  # sum_{j>=i}(s_j - nu)
+    prev = jnp.concatenate([jnp.zeros((1,), s.dtype), s[:-1]])
+    scale = 1.0 + varsig / jnp.maximum(omega, 1e-30)
+    ok = (varsig >= 0) & (prev * scale < nu)
+    # largest index satisfying both conditions
+    i_star = jnp.max(jnp.where(ok, idx, -1))
+    no_violation = jnp.max(eta) <= nu
+    sc = jnp.where(no_violation, 1.0, scale[jnp.maximum(i_star, 0)])
+    proj_sorted = jnp.where(
+        no_violation | (idx < i_star), s * sc, jnp.full_like(s, nu)
+    )
+    out = jnp.zeros_like(eta).at[order].set(proj_sorted)
+    return out
+
+
+def capped_simplex_project_loop(eta: jax.Array, nu: float,
+                                max_iters: int | None = None) -> jax.Array:
+    """Rule 3 (eq. 12): iterative projection. Terminates in <= ceil(1/nu)
+    rounds (each round fixes at least one new entry at nu)."""
+    if max_iters is None:
+        max_iters = int(1.0 / nu) + 2
+
+    def cond(state):
+        eta, it = state
+        varsig = jnp.sum(jnp.where(eta > nu, eta - nu, 0.0))
+        return (varsig > 1e-12) & (it < max_iters)
+
+    def body(state):
+        eta, it = state
+        over = eta >= nu
+        varsig = jnp.sum(jnp.where(eta > nu, eta - nu, 0.0))
+        omega = jnp.sum(jnp.where(eta < nu, eta, 0.0))
+        eta = jnp.where(
+            over, nu, eta * (1.0 + varsig / jnp.maximum(omega, 1e-30))
+        )
+        return eta, it + 1
+
+    out, _ = jax.lax.while_loop(cond, body, (eta, jnp.array(0, jnp.int32)))
+    return out
+
+
+def capped_entropy_prox(log_lam: jax.Array, v: jax.Array,
+                        gamma: float | jax.Array, tau: float | jax.Array,
+                        d: int | jax.Array, nu: float) -> jax.Array:
+    """nu-Saddle update: entropy-prox followed by the Rule-2 projection.
+
+    Returns normalized log-weights on the *capped* simplex D_n."""
+    log_eta = entropy_prox(log_lam, v, gamma, tau, d)
+    eta = capped_simplex_project_sorted(jnp.exp(log_eta), nu)
+    return jnp.log(jnp.maximum(eta, 1e-38))

@@ -1,0 +1,101 @@
+"""Scikit-learn-style front end for Saddle-SVC.
+
+``SaddleSVC``    -- hard-margin SVM (HM-Saddle).
+``SaddleNuSVC``  -- nu-SVM (nu-Saddle).
+
+Both run Algorithm 1 (pre-processing) + Algorithm 2 (the saddle solver)
+and expose ``w_``, ``b_`` in the ORIGINAL input space.  The offset uses
+the paper's footnote 2: b* = w*^T (A eta* + B xi*) / 2.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import preprocess as pp
+from repro.core import saddle
+
+
+def split_classes(x: np.ndarray, y: np.ndarray):
+    """Split (x, y in {+-1}) into the P (+1) and Q (-1) point matrices."""
+    x = np.asarray(x, np.float32)
+    y = np.asarray(y)
+    return x[y > 0], x[y < 0]
+
+
+class SaddleSVC:
+    """Hard-margin SVM via HM-Saddle (paper Sections 2-3)."""
+
+    nu = 0.0
+
+    def __init__(self, eps: float = 1e-3, beta: float = 0.1,
+                 num_iters: int | None = None, block_size: int = 1,
+                 seed: int = 0, record_every: int | None = None):
+        self.eps = eps
+        self.beta = beta
+        self.num_iters = num_iters
+        self.block_size = block_size
+        self.seed = seed
+        self.record_every = record_every
+
+    def _nu_for(self, n1: int, n2: int) -> float:
+        return 0.0
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "SaddleSVC":
+        xp, xm = split_classes(x, y)
+        n1, n2 = len(xp), len(xm)
+        key = jax.random.key(self.seed)
+        k_pre, _ = jax.random.split(key)
+        pre = pp.preprocess(xp, xm, k_pre)
+        nu = self._nu_for(n1, n2)
+        res = saddle.solve(
+            pre.xp, pre.xm, eps=self.eps, beta=self.beta, nu=nu,
+            num_iters=self.num_iters, block_size=self.block_size,
+            seed=self.seed, record_every=self.record_every)
+        st = res.state
+        self.history_ = res.history
+        # direction & offset in TRANSFORMED space
+        eta = jnp.exp(st.log_eta)
+        xi = jnp.exp(st.log_xi)
+        a_eta = eta @ pre.xp
+        b_xi = xi @ pre.xm
+        w_t = a_eta - b_xi                     # optimal w = A eta - B xi
+        b_t = jnp.dot(w_t, a_eta + b_xi) / 2.0
+        # map back to input space (orthonormal transform + scaling)
+        self.w_ = np.asarray(pp.recover_direction(w_t, pre))
+        # recover_direction already folds the transform AND the scale, so
+        # w_ . x == w_t . x_t pointwise and the threshold carries over as-is.
+        self.b_ = float(b_t)
+        self.objective_ = float(0.5 * jnp.sum(w_t * w_t))
+        self.margin_ = float(jnp.linalg.norm(w_t))  # polytope distance
+        self.eta_ = np.asarray(eta)
+        self.xi_ = np.asarray(xi)
+        self.state_ = st
+        return self
+
+    def decision_function(self, x: np.ndarray) -> np.ndarray:
+        return np.asarray(x, np.float32) @ self.w_ - self.b_
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return np.where(self.decision_function(x) >= 0, 1, -1)
+
+    def score(self, x: np.ndarray, y: np.ndarray) -> float:
+        return float(np.mean(self.predict(x) == np.asarray(y)))
+
+
+class SaddleNuSVC(SaddleSVC):
+    """nu-SVM via nu-Saddle.  ``alpha`` parameterizes the paper's
+    experiment convention nu = 1 / (alpha * min(n1, n2))."""
+
+    def __init__(self, nu: float | None = None, alpha: float = 0.85,
+                 **kw):
+        super().__init__(**kw)
+        self._nu = nu
+        self.alpha = alpha
+
+    def _nu_for(self, n1: int, n2: int) -> float:
+        if self._nu is not None:
+            return self._nu
+        return 1.0 / (self.alpha * min(n1, n2))

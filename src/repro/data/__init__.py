@@ -1,0 +1,2 @@
+"""Data pipeline: synthetic SVM generators (paper Appendix D), a libsvm
+text-format reader, and a synthetic LM token pipeline for the model zoo."""

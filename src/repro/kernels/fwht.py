@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: tiled Fast Walsh--Hadamard Transform.
+
+The paper's pre-processing (Algorithm 1) applies ``WD`` to every point:
+O(n d log d) -- the single largest dense sweep in Saddle-SVC
+(everything after it is O(n) per iteration).  GPU/CPU implementations
+recurse in place; on TPU we instead keep a (TILE_N, d) block of points
+resident in VMEM and run all log2(d) butterfly stages on it before
+writing back, so HBM traffic is one read + one write per point instead
+of log d round trips (DESIGN.md section 2).
+
+Grid: one program per tile of TILE_N points; the full d axis lives in
+the block (d is a power of two, padded by the caller).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwht_kernel(x_ref, o_ref, *, d: int, normalize: bool):
+    x = x_ref[...]                      # (TILE_N, d) block in VMEM
+    t = x.shape[0]
+    h = 1
+    while h < d:
+        x = x.reshape(t, d // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2)
+        x = x.reshape(t, d)
+        h *= 2
+    if normalize:
+        x = x * (1.0 / (d ** 0.5))
+    o_ref[...] = x.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "normalize",
+                                             "interpret"))
+def fwht_pallas(x: jax.Array, *, tile_n: int = 0, normalize: bool = True,
+                interpret: bool = True) -> jax.Array:
+    """Walsh--Hadamard transform along the last axis of (n, d) ``x``.
+
+    d must be a power of two.  ``tile_n=0`` picks the largest tile that
+    keeps the working set under ~4 MiB of VMEM (x + butterfly temps).
+    """
+    n, d = x.shape
+    if d & (d - 1):
+        raise ValueError(f"d must be a power of two, got {d}")
+    if tile_n == 0:
+        budget = 4 * 1024 * 1024 // (4 * max(d, 1))  # fp32 bytes per row
+        tile_n = max(8, min(256, 1 << max(budget - 1, 1).bit_length() - 1))
+        tile_n = min(tile_n, max(8, budget))
+    tile_n = min(tile_n, n) if n >= 8 else n
+    pad = (-n) % tile_n
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    grid = (xp.shape[0] // tile_n,)
+    out = pl.pallas_call(
+        functools.partial(_fwht_kernel, d=d, normalize=normalize),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile_n, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[:n] if pad else out

@@ -1,0 +1,38 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; on a
+real TPU build, pass interpret=False (the BlockSpecs are TPU-shaped:
+lane-aligned tiles, full-d VMEM blocks for the FWHT butterfly).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fwht as _fwht
+from repro.kernels import saddle_update as _su
+from repro.kernels import ref as ref  # noqa: F401  (re-exported oracle)
+
+
+def fwht(x: jax.Array, *, normalize: bool = True,
+         interpret: bool = True) -> jax.Array:
+    """Tiled Walsh--Hadamard transform (rows of (n, d), d a power of 2)."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None, :]
+    out = _fwht.fwht_pallas(x, normalize=normalize, interpret=interpret)
+    return out[0] if squeeze else out
+
+
+def momentum_dot(cols, log_lam, log_prev, theta, *, interpret=True):
+    return _su.momentum_dot(cols, log_lam, log_prev, theta,
+                            interpret=interpret)
+
+
+def mwu_update(cols, log_lam, u, dw, *, sign, gamma, tau, d_eff,
+               interpret=True):
+    return _su.mwu_update(cols, log_lam, u, dw,
+                          jnp.asarray(sign), jnp.asarray(gamma),
+                          jnp.asarray(tau), jnp.asarray(d_eff),
+                          interpret=interpret)

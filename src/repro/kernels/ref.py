@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth every
+kernel is allclose-tested against, per shape/dtype sweep)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fwht_ref(x: jax.Array) -> jax.Array:
+    """Normalized Walsh--Hadamard transform along the last axis."""
+    from repro.core.preprocess import fwht
+    return fwht(x, normalize=True)
+
+
+def momentum_dot_ref(cols: jax.Array, lam: jax.Array, lam_prev: jax.Array,
+                     theta: jax.Array | float) -> jax.Array:
+    """delta = cols^T (lam + theta (lam - lam_prev)).
+
+    cols: (n, B) sampled coordinate rows; lam: (n,).  Returns (B,)."""
+    mom = lam + theta * (lam - lam_prev)
+    return cols.T @ mom
+
+
+def mwu_update_ref(cols: jax.Array, log_lam: jax.Array, u: jax.Array,
+                   dw: jax.Array, sign: float, gamma: jax.Array | float,
+                   tau: jax.Array | float, d_eff: jax.Array | float):
+    """Fused Algorithm-2 dual update (lines 5-6) + incremental u.
+
+    cols: (n, B), dw: (B,).  Returns:
+      log_new  (n,) UNNORMALIZED new log-weights
+      u_new    (n,) = u + cols @ dw
+      (the caller normalizes with a logsumexp -- the kernel emits
+       per-tile max/sumexp partials for that)
+    """
+    dv = cols @ dw
+    v = sign * (u + d_eff * dv)
+    c = 1.0 / (gamma + d_eff / tau)
+    log_new = c * ((d_eff / tau) * log_lam - v)
+    return log_new, u + dv

@@ -1,0 +1,155 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# (the two lines above MUST run before any jax import -- jax locks the
+#  device count on first init; see the brief / DESIGN.md)
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import get_config, list_configs          # noqa: E402
+from repro.launch import specs as specs_mod                 # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.launch.shapes import SHAPES, applicability       # noqa: E402
+from repro.utils import roofline as rl                      # noqa: E402
+
+ASSIGNED = [
+    "qwen2-vl-7b", "chatglm3-6b", "xlstm-125m", "recurrentgemma-2b",
+    "deepseek-v2-236b", "deepseek-v2-lite-16b", "gemma-7b",
+    "deepseek-67b", "whisper-medium", "h2o-danube-1.8b",
+]
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            verbose: bool = True, unroll: bool = False) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if unroll:
+        # unrolled layer stack: XLA's cost_analysis counts a scan body
+        # ONCE, so roofline-accurate runs emit every period explicitly
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    shape = SHAPES[shape_name]
+    ok, reason = applicability(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "applicable": ok, "reason": reason, "unrolled": unroll}
+    if not ok:
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+                  f"SKIP ({reason})")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        fn, args = specs_mod.build_lowerable(cfg, shape, mesh)
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        roof = rl.analyze(compiled)
+
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind != "decode" else 1)
+    mflops_global = rl.model_flops(cfg, shape.kind, tokens)
+    n_chips = 512 if multi_pod else 256
+    mflops_dev = mflops_global / n_chips
+
+    rec.update({
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": _mem_dict(mem),
+        "hlo_flops_per_device": roof.flops,
+        "hlo_bytes_per_device": roof.hbm_bytes,
+        "collective_bytes_per_device": roof.collective_bytes,
+        "collective_breakdown": roof.collectives.bytes_by_op,
+        "collective_counts": roof.collectives.count_by_op,
+        "compute_s": roof.compute_s,
+        "memory_s": roof.memory_s,
+        "collective_s": roof.collective_s,
+        "bottleneck": roof.bottleneck,
+        "model_flops_per_device": mflops_dev,
+        "useful_flops_ratio": (mflops_dev / roof.flops
+                               if roof.flops else 0.0),
+        "mfu_bound": roof.mfu(mflops_dev),
+    })
+    if verbose:
+        mb = rec["memory"].get("temp_size_in_bytes", 0) / 2**30
+        arg_gb = rec["memory"].get("argument_size_in_bytes", 0) / 2**30
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK  "
+              f"args {arg_gb:.2f} GiB  temps {mb:.2f} GiB/dev  "
+              f"compute {roof.compute_s*1e3:.2f} ms  "
+              f"memory {roof.memory_s*1e3:.2f} ms  "
+              f"collective {roof.collective_s*1e3:.2f} ms  "
+              f"-> {roof.bottleneck}-bound  "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+        print("  memory_analysis:", json.dumps(rec["memory"]))
+        print("  cost_analysis: flops=%.3e bytes=%.3e coll=%.3e"
+              % (roof.flops, roof.hbm_bytes, roof.collective_bytes))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None,
+                    help=f"one of {list_configs()} (default: all assigned)")
+    ap.add_argument("--shape", default=None,
+                    help=f"one of {sorted(SHAPES)} (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="emit layers unrolled (accurate cost_analysis)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    combos = [(a, s) for a in archs for s in shapes]
+    if not args.arch and not args.shape:
+        # the dense->SWA variant that licenses long_500k for gemma
+        combos.append(("gemma-7b-swa", "long_500k"))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape in combos:
+        for mp in meshes:
+                tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+                if args.unroll:
+                    tag += "_unrolled"
+                try:
+                    rec = run_one(arch, shape, mp, unroll=args.unroll)
+                except Exception as e:      # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "error": str(e)}
+                    failures.append(tag)
+                with open(os.path.join(args.out, tag + ".json"),
+                          "w") as f:
+                    json.dump(rec, f, indent=1)
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete: all combinations lowered + compiled")
+
+
+if __name__ == "__main__":
+    main()

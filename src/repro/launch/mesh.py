@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Functions (not module constants) so importing never touches jax device
+state -- the dry-run forces 512 host devices before calling these."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """Single pod: 16x16 (data, model).  Multi-pod: 2x16x16
+    (pod, data, model) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices: int | None = None) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (unit tests)."""
+    n = devices or len(jax.devices())
+    model = 1
+    for cand in (4, 2, 1):
+        if n % cand == 0:
+            model = cand
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,214 @@
+"""ShapeDtypeStruct input specs + step builders + sharding trees for the
+dry-run and the real launchers.
+
+``build_lowerable(cfg, shape, mesh)`` returns (fn, args) such that
+``jax.jit(fn).lower(*args).compile()`` exercises the full
+(architecture x input-shape x mesh) combination with zero device
+allocation: every arg is a ShapeDtypeStruct carrying a NamedSharding.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.shapes import SHAPES, InputShape
+from repro.models import sharding as shd
+from repro.models import transformer as tf
+from repro.serve import engine
+from repro.train import optimizer as opt
+from repro.train import steps as train_steps
+
+CACHE_DTYPE = jnp.bfloat16
+
+
+# ----------------------------------------------------------- sharding trees
+def _leaf_logical(path: str, shape) -> list:
+    """Logical axes for a serve-state / batch leaf, by name + rank."""
+    leaf = path.split("/")[-1]
+    rank = len(shape)
+    if leaf in ("k", "v") and rank == 4:
+        # heads over 'model' when divisible (local DUS on decode); the
+        # seq dim only takes data/pod leftovers.  MLA caches (below)
+        # have no heads dim and keep seq-over-model (memory forces it).
+        return ["batch", "kv_seq_bp", "kv_heads", None]
+    if leaf == "c_kv" and rank == 3:
+        return ["batch", "kv_seq", None]
+    if leaf == "k_rope" and rank == 3:
+        return ["batch", "kv_seq", None]
+    if leaf == "C" and rank == 4:
+        return ["batch", "heads", None, None]
+    if leaf in ("n", "m", "c", "h") and rank == 3:
+        return ["batch", "heads", None]
+    if leaf == "h" and rank == 2:
+        return ["batch", "mlp"]
+    if leaf == "conv" and rank == 3:
+        return ["batch", None, "mlp"]
+    if leaf == "last_logits" and rank == 2:
+        return ["batch", "vocab"]
+    if leaf in ("tokens", "targets", "vision_mask") and rank == 2:
+        return ["batch", None]
+    if leaf in ("vision_embeds", "enc_frames") and rank == 3:
+        return ["batch", None, None]
+    if leaf == "positions":
+        return [None] * (rank - 2) + ["batch", None]
+    return [None] * rank
+
+
+def _tree_paths(tree):
+    def keyname(p):
+        return str(getattr(p, "key", getattr(p, "idx", getattr(p, "name",
+                                                               p))))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: ("/".join(keyname(p) for p in path), leaf),
+        tree, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def state_sharding(tree, mesh):
+    """NamedSharding tree for serve states / batches.  Leaves under a
+    ``blocks`` list are scanned (leading layer axis, never sharded)."""
+    def visit(path, leaf):
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        shape = leaf.shape
+        if "/blocks/" in f"/{keys}/" and len(shape) >= 1:
+            spec = shd.spec_for(_leaf_logical(keys, shape[1:]), shape[1:])
+            spec = P(None, *spec)
+        else:
+            spec = shd.spec_for(_leaf_logical(keys, shape), shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(visit, tree)
+
+
+def train_state_sharding(state_shapes, mesh, cfg=None):
+    fsdp = cfg.fsdp_params if cfg is not None else True
+    embed_fsdp = cfg.embed_fsdp if cfg is not None else True
+    params_sh = shd.param_sharding_tree(state_shapes.params, mesh,
+                                        fsdp=fsdp,
+                                        embed_fsdp=embed_fsdp)
+
+    def like_params(tree):
+        # optimizer states ALWAYS keep full FSDP sharding (ZeRO-2 when
+        # the compute params don't)
+        return shd.param_sharding_tree(tree, mesh)
+
+    os = state_shapes.opt_state
+    opt_sh = opt.OptState(master=like_params(os.master),
+                          m=like_params(os.m), v=like_params(os.v),
+                          step=NamedSharding(mesh, P()))
+    return train_steps.TrainState(params=params_sh, opt_state=opt_sh)
+
+
+def _with_sharding(shapes_tree, shardings_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes_tree, shardings_tree)
+
+
+# -------------------------------------------------------------- input specs
+def batch_specs(cfg, shape: InputShape) -> dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one step of the given shape (train/prefill)."""
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    d = cfg.d_model
+    out: dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.kind == "train":
+        out["targets"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.vision_embeds and shape.kind != "decode":
+        out["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, s, d), jnp.dtype(cfg.compute_dtype))
+        out["vision_mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+        out["positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    if cfg.is_encoder_decoder and shape.kind != "decode":
+        out["enc_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_frames, d), jnp.dtype(cfg.compute_dtype))
+    return out
+
+
+def input_specs(arch_or_cfg, shape_name: str = "train_4k"):
+    """Public entry: ShapeDtypeStruct stand-ins for every model input."""
+    from repro.configs import get_config
+    cfg = arch_or_cfg if hasattr(arch_or_cfg, "d_model") \
+        else get_config(arch_or_cfg)
+    return batch_specs(cfg, SHAPES[shape_name])
+
+
+# ------------------------------------------------------------ step builders
+def opt_config(cfg) -> opt.AdamWConfig:
+    return opt.AdamWConfig(state_dtype=cfg.optimizer_state_dtype)
+
+
+def build_lowerable(cfg, shape: InputShape, mesh):
+    """Returns (fn, args_pytree) ready for jit(fn).lower(*args)."""
+    shd.set_mesh_axes(mesh)
+    if shape.kind == "train":
+        ocfg = opt_config(cfg)
+        state_shapes = jax.eval_shape(
+            lambda: train_steps.init_train_state(jax.random.key(0), cfg,
+                                                 ocfg))
+        state_sh = train_state_sharding(state_shapes, mesh, cfg)
+        state_in = _with_sharding(state_shapes, state_sh)
+        batch = batch_specs(cfg, shape)
+        batch_in = _with_sharding(batch, state_sharding(batch, mesh))
+        step = train_steps.make_train_step(cfg, ocfg)
+        return step, (state_in, batch_in)
+
+    if shape.kind == "prefill":
+        params_shapes = jax.eval_shape(
+            lambda: tf.init_lm(jax.random.key(0), cfg))
+        params_in = _with_sharding(
+            params_shapes,
+            shd.param_sharding_tree(params_shapes, mesh,
+                                    fsdp=cfg.fsdp_params,
+                                    embed_fsdp=cfg.embed_fsdp))
+        batch = batch_specs(cfg, shape)
+        batch_in = _with_sharding(batch, state_sharding(batch, mesh))
+
+        def prefill_step(params, batch):
+            extras = {k: v for k, v in batch.items() if k != "tokens"}
+            if "positions" in extras:
+                extras.pop("positions")
+            return engine.prefill(params, cfg, batch["tokens"],
+                                  max_len=shape.seq_len,
+                                  cache_dtype=CACHE_DTYPE, **extras)
+
+        return prefill_step, (params_in, batch_in)
+
+    # decode: one token against a seq_len cache
+    params_shapes = jax.eval_shape(
+        lambda: tf.init_lm(jax.random.key(0), cfg))
+    params_in = _with_sharding(
+        params_shapes,
+        shd.param_sharding_tree(params_shapes, mesh,
+                                fsdp=cfg.fsdp_params,
+                                embed_fsdp=cfg.embed_fsdp))
+    b = shape.global_batch
+
+    def make_state():
+        cache = engine.init_cache(cfg, b, shape.seq_len,
+                                  cache_dtype=CACHE_DTYPE)
+        return engine.ServeState(
+            cache=cache,
+            last_logits=jnp.zeros((b, cfg.padded_vocab),
+                                  jnp.dtype(cfg.compute_dtype)),
+            pos=jnp.full((), shape.seq_len - 1, jnp.int32))
+
+    state_shapes = jax.eval_shape(make_state)
+    state_in = _with_sharding(state_shapes,
+                              state_sharding(state_shapes, mesh))
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32,
+                                  sharding=NamedSharding(
+                                      mesh, shd.spec_for(
+                                          ["batch", None], (b, 1))))
+
+    def serve_step(params, tokens, state):
+        return engine.decode_step(params, cfg, tokens, state)
+
+    return serve_step, (params_in, tokens, state_in)

@@ -1,0 +1,77 @@
+"""Production training launcher: pjit the train step over the local
+device mesh (or the forced-host-device production mesh) and run.
+
+On this CPU container it runs reduced configs on a 1-device mesh; on a
+real pod slice the same entrypoint shards over (data, model).
+
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m \
+        --steps 20 --batch 8 --seq 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.tokens import TokenPipeline
+from repro.launch.mesh import make_test_mesh
+from repro.models import sharding as shd
+from repro.models import transformer as tf
+from repro.train import optimizer as opt
+from repro.train import steps
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    mesh = make_test_mesh()
+    shd.set_mesh_axes(mesh)
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=10,
+                           state_dtype=cfg.optimizer_state_dtype)
+
+    with mesh:
+        state = steps.init_train_state(jax.random.key(0), cfg, ocfg)
+        # NB: no donation -- with float32 params the fp32 master aliases
+        # the param buffers (astype is a no-op copy) and XLA rejects
+        # donating the same buffer twice
+        train_step = jax.jit(steps.make_train_step(cfg, ocfg))
+        pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch)
+        print(f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+              f"arch={cfg.name} "
+              f"params={tf.count_params(state.params):,}")
+        t0 = time.time()
+        for step in range(args.steps):
+            nb = pipe.next_batch()
+            batch = {"tokens": jnp.asarray(nb.tokens),
+                     "targets": jnp.asarray(nb.targets)}
+            if cfg.vision_embeds:
+                b, s = nb.tokens.shape
+                batch["vision_embeds"] = jnp.zeros((b, s, cfg.d_model))
+                batch["vision_mask"] = jnp.zeros((b, s), bool)
+                batch["positions"] = jnp.broadcast_to(
+                    jnp.arange(s, dtype=jnp.int32)[None, None],
+                    (3, b, s))
+            if cfg.is_encoder_decoder:
+                batch["enc_frames"] = jnp.zeros(
+                    (nb.tokens.shape[0], cfg.enc_frames, cfg.d_model))
+            state, m = train_step(state, batch)
+            if step % 5 == 0 or step == args.steps - 1:
+                print(f"step {step:4d} loss {float(m['loss']):.4f} "
+                      f"({time.time() - t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules.
+
+Plain-pytree parameters (no framework dependency), scan-over-layers with
+remat, GSPMD sharding constraints via repro.models.sharding.
+"""

@@ -1,0 +1,339 @@
+"""Attention: GQA (with full / sliding-window / local masking, RoPE
+variants) and MLA (DeepSeek-V2 multi-head latent attention with the
+compressed-KV cache and the absorbed decode path).
+
+Memory discipline: training/prefill attention is QUERY-CHUNKED (exact,
+per-chunk row softmax) so a 32k prefill never materializes an S x S
+score tensor; decode is a single-row attention against the cache.
+
+Caches:
+  GQA full   {k, v: (B, T_max, KV, Dh), index}
+  GQA window {k, v: (B, W, KV, Dh), pos: (W,), index}   (ring buffer)
+  MLA        {c_kv: (B, T, lora), k_rope: (B, T, rope), index}
+  cross      {k, v: (B, T_enc, KV, Dh)}                 (static)
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding as shd
+from repro.models.layers import (apply_rope, default_mrope_sections,
+                                 normal, init_rmsnorm, rmsnorm)
+
+NEG_INF = -2.0 ** 30
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ------------------------------------------------------------------ init
+def init_gqa(key, cfg, *, head_dim=None, num_heads=None, num_kv=None):
+    h = num_heads or cfg.num_heads
+    kv = num_kv or cfg.num_kv_heads
+    dh = head_dim or cfg.head_dim
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "wq": normal(ks[0], (d, h, dh), s, _dt(cfg)),
+        "wk": normal(ks[1], (d, kv, dh), s, _dt(cfg)),
+        "wv": normal(ks[2], (d, kv, dh), s, _dt(cfg)),
+        "wo": normal(ks[3], (h, dh, d), 1.0 / math.sqrt(h * dh), _dt(cfg)),
+    }
+
+
+def init_mla(key, cfg):
+    d, h = cfg.d_model, cfg.num_heads
+    nope = cfg.head_dim
+    rope = cfg.mla_rope_dim
+    vd = cfg.mla_v_dim or cfg.head_dim
+    lora = cfg.mla_kv_lora
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wkv_a": normal(ks[0], (d, lora + rope), s, _dt(cfg)),
+        "wkv_b_k": normal(ks[1], (lora, h, nope),
+                          1.0 / math.sqrt(lora), _dt(cfg)),
+        "wkv_b_v": normal(ks[2], (lora, h, vd),
+                          1.0 / math.sqrt(lora), _dt(cfg)),
+        "wo": normal(ks[3], (h, vd, d), 1.0 / math.sqrt(h * vd), _dt(cfg)),
+        "kv_norm": init_rmsnorm(lora, cfg),
+    }
+    if cfg.mla_q_lora:
+        p["wq_a"] = normal(ks[4], (d, cfg.mla_q_lora), s, _dt(cfg))
+        p["wq_b"] = normal(ks[5], (cfg.mla_q_lora, h, nope + rope),
+                           1.0 / math.sqrt(cfg.mla_q_lora), _dt(cfg))
+        p["q_norm"] = init_rmsnorm(cfg.mla_q_lora, cfg)
+    else:
+        p["wq"] = normal(ks[4], (d, h, nope + rope), s, _dt(cfg))
+    return p
+
+
+def init_cross(key, cfg):
+    return init_gqa(key, cfg)
+
+
+# -------------------------------------------------------- chunked attention
+def _pick_chunk(sq: int, t: int) -> int:
+    if sq <= 1024:
+        return sq
+    return 256 if t >= 16384 else 1024
+
+
+def dot_attention(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
+                  chunk: int | None = None):
+    """Exact chunked attention.
+
+    q: (B, Sq, H, Dh); k, v: (B, T, KV, Dh); q_pos: (Sq,), k_pos: (T,).
+    k_pos entries < 0 are invalid (empty ring-buffer slots)."""
+    b, sq, h, dh = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, sq, kv, g, dh)
+    chunk = chunk or _pick_chunk(sq, t)
+    chunk = min(chunk, sq)
+    pad = (-sq) % chunk
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad), constant_values=q_pos[-1])
+    nc = qg.shape[1] // chunk
+    qg = qg.reshape(b, nc, chunk, kv, g, dh)
+    q_pos_c = q_pos.reshape(nc, chunk)
+
+    def attend_chunk(args):
+        qc, qpc = args                       # (B, C, KV, G, Dh), (C,)
+        scores = jnp.einsum("bckgd,btkd->bkgct", qc, k,
+                            preferred_element_type=jnp.float32) * scale
+        mask = k_pos[None, :] >= 0
+        if causal:
+            mask &= k_pos[None, :] <= qpc[:, None]
+        if window > 0:
+            mask &= k_pos[None, :] > qpc[:, None] - window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgct,btkd->bckgd", probs, v)
+
+    if nc == 1:
+        out = attend_chunk((qg[:, 0], q_pos_c[0]))[:, None]
+    else:
+        # remat each chunk: without this, the VJP keeps every chunk's
+        # (B,KV,G,C,T) softmax residents simultaneously (measured
+        # +16 GiB/device on train_4k) -- flash-attention-style recompute
+        out = jax.lax.map(jax.checkpoint(attend_chunk),
+                          (jnp.moveaxis(qg, 1, 0), q_pos_c))
+        out = jnp.moveaxis(out, 0, 1)
+    out = out.reshape(b, nc * chunk, h, v.shape[-1])
+    return out[:, :sq]
+
+
+# ------------------------------------------------------------- GQA block
+def gqa_attention(params, x, *, cfg, positions, causal=True, window=0,
+                  cache=None, cross_kv=None):
+    """Returns (out (B,S,D), new_cache).  positions: (B,S) or (3,B,S)."""
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if cross_kv is not None:
+        k, v = cross_kv
+        t = k.shape[1]
+        k_pos = jnp.arange(t)
+        q_pos = jnp.zeros((s,), jnp.int32)   # no causal mask for cross
+        out = dot_attention(q, k, v, q_pos, k_pos, causal=False, window=0)
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), cache
+
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.rope_kind != "none":
+        sections = None
+        if cfg.rope_kind == "mrope":
+            rot = int(cfg.head_dim * cfg.rope_fraction)
+            sections = default_mrope_sections(rot // 2)
+            q = apply_rope(q, positions, theta=cfg.rope_theta,
+                           fraction=cfg.rope_fraction,
+                           mrope_sections=sections)
+            k = apply_rope(k, positions, theta=cfg.rope_theta,
+                           fraction=cfg.rope_fraction,
+                           mrope_sections=sections)
+        else:
+            frac = cfg.rope_fraction if cfg.rope_kind == "partial" else 1.0
+            q = apply_rope(q, positions, theta=cfg.rope_theta,
+                           fraction=frac)
+            k = apply_rope(k, positions, theta=cfg.rope_theta,
+                           fraction=frac)
+    q = shd.shard(q, "batch", None, "heads", None)
+    k = shd.shard(k, "batch", "seq_shard" if b == 1 else None,
+                  "kv_heads", None)
+    v = shd.shard(v, "batch", "seq_shard" if b == 1 else None,
+                  "kv_heads", None)
+
+    pos1d = positions[0] if positions.ndim == 3 else positions
+    q_pos = pos1d[0]                          # (S,) same across batch
+
+    if cache is None:
+        out = dot_attention(q, k, v, q_pos, q_pos, causal=causal,
+                            window=window)
+        new_cache = None
+    elif s > 1:
+        # PREFILL (assumes an empty cache, index == 0): attend within the
+        # prompt directly and write the cache for subsequent decode.
+        out = dot_attention(q, k, v, q_pos, q_pos, causal=causal,
+                            window=window)
+        new_cache = dict(cache)
+        k = k.astype(cache["k"].dtype)
+        v = v.astype(cache["v"].dtype)
+        if "pos" in cache:                    # ring buffer (SWA)
+            w = cache["k"].shape[1]
+            if s >= w:
+                # keep the last window, laid out so slot == pos % w (the
+                # decode ring invariant: the write at index % w always
+                # evicts the oldest entry)
+                shift = s % w
+                new_cache["k"] = jnp.roll(k[:, -w:], shift, axis=1)
+                new_cache["v"] = jnp.roll(v[:, -w:], shift, axis=1)
+                new_cache["pos"] = jnp.roll(q_pos[-w:], shift, axis=0)
+            else:
+                new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k, 0, axis=1)
+                new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v, 0, axis=1)
+                new_cache["pos"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["pos"], q_pos, 0, axis=0)
+            new_cache["index"] = cache["index"] + s
+        else:
+            new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k, cache["index"], axis=1)
+            new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v, cache["index"], axis=1)
+            new_cache["index"] = cache["index"] + s
+    else:
+        # DECODE: single query against the cache.
+        new_cache = dict(cache)
+        k = k.astype(cache["k"].dtype)
+        v = v.astype(cache["v"].dtype)
+        if "pos" in cache:                    # ring buffer (SWA)
+            w = cache["k"].shape[1]
+            slot = cache["index"] % w
+            new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k, slot, axis=1)
+            new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v, slot, axis=1)
+            new_cache["pos"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], q_pos, slot, axis=0)
+            new_cache["index"] = cache["index"] + s
+            out = dot_attention(q, new_cache["k"], new_cache["v"], q_pos,
+                                new_cache["pos"], causal=True,
+                                window=window)
+        else:
+            idx = cache["index"]
+            new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k, idx, axis=1)
+            new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v, idx, axis=1)
+            new_cache["index"] = idx + s
+            t_max = cache["k"].shape[1]
+            k_pos = jnp.arange(t_max)
+            k_pos = jnp.where(k_pos < idx + s, k_pos, -1)
+            out = dot_attention(q, new_cache["k"], new_cache["v"], q_pos,
+                                k_pos, causal=True, window=window)
+    out = shd.shard(out, "batch", None, "heads", None)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), new_cache
+
+
+def init_gqa_cache(cfg, batch: int, t_max: int, *, window: int = 0,
+                   dtype=jnp.bfloat16):
+    kv, dh = cfg.num_kv_heads, cfg.head_dim
+    if window > 0:
+        w = min(window, t_max)
+        return {"k": jnp.zeros((batch, w, kv, dh), dtype),
+                "v": jnp.zeros((batch, w, kv, dh), dtype),
+                "pos": jnp.full((w,), -1, jnp.int32),
+                "index": jnp.zeros((), jnp.int32)}
+    return {"k": jnp.zeros((batch, t_max, kv, dh), dtype),
+            "v": jnp.zeros((batch, t_max, kv, dh), dtype),
+            "index": jnp.zeros((), jnp.int32)}
+
+
+# ------------------------------------------------------------- MLA block
+def _mla_q(params, x, cfg):
+    if cfg.mla_q_lora:
+        cq = rmsnorm(params["q_norm"], x @ params["wq_a"], cfg.norm_eps)
+        return jnp.einsum("bsl,lhk->bshk", cq, params["wq_b"])
+    return jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+
+
+def mla_attention(params, x, *, cfg, positions, cache=None):
+    """DeepSeek-V2 MLA.  Prefill/train: expanded K/V (chunked exact
+    attention).  Decode (cache + S small): the ABSORBED path -- scores
+    and values computed directly against the compressed c_kv cache."""
+    b, s, _ = x.shape
+    nope, rope = cfg.head_dim, cfg.mla_rope_dim
+    pos1d = positions[0] if positions.ndim == 3 else positions
+    q_pos = pos1d[0]
+
+    q = _mla_q(params, x, cfg)                      # (B,S,H,nope+rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, pos1d, theta=cfg.rope_theta)
+
+    ckv_full = x @ params["wkv_a"]                  # (B,S,lora+rope)
+    c_kv = rmsnorm(params["kv_norm"], ckv_full[..., :cfg.mla_kv_lora],
+                   cfg.norm_eps)
+    k_rope = apply_rope(ckv_full[..., cfg.mla_kv_lora:][:, :, None, :],
+                        pos1d, theta=cfg.rope_theta)[:, :, 0]  # (B,S,rope)
+
+    scale = 1.0 / math.sqrt(nope + rope)
+    if cache is None or s > 1:
+        # expanded path (training / prefill)
+        k_nope = jnp.einsum("btl,lhk->bthk", c_kv, params["wkv_b_k"])
+        vv = jnp.einsum("btl,lhv->bthv", c_kv, params["wkv_b_v"])
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (*k_nope.shape[:3], rope))], -1)
+        q_full = jnp.concatenate([q_nope, q_rope], -1)
+        out = dot_attention(q_full, k_full, vv, q_pos, q_pos,
+                            causal=True, window=0)
+        new_cache = None
+        if cache is not None:                 # prefill: fill the cache
+            new_cache = dict(cache)
+            new_cache["c_kv"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype),
+                cache["index"], axis=1)
+            new_cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+                cache["index"], axis=1)
+            new_cache["index"] = cache["index"] + s
+    else:
+        idx = cache["index"]
+        new_cache = dict(cache)
+        new_cache["c_kv"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), idx, axis=1)
+        new_cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), idx,
+            axis=1)
+        new_cache["index"] = idx + s
+        t_max = cache["c_kv"].shape[1]
+        k_pos = jnp.arange(t_max)
+        valid = (k_pos < idx + s) & (k_pos[None, :] <= q_pos[:, None])
+        # absorbed scores: q_nope through wkv_b_k once, then vs c_kv
+        q_abs = jnp.einsum("bshk,lhk->bshl", q_nope, params["wkv_b_k"])
+        scores = (jnp.einsum("bshl,btl->bhst", q_abs, new_cache["c_kv"],
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bshr,btr->bhst", q_rope,
+                               new_cache["k_rope"],
+                               preferred_element_type=jnp.float32)) * scale
+        scores = jnp.where(valid[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+        ctx = jnp.einsum("bhst,btl->bshl", probs, new_cache["c_kv"])
+        out = jnp.einsum("bshl,lhv->bshv", ctx, params["wkv_b_v"])
+    out = shd.shard(out, "batch", None, "heads", None)
+    return jnp.einsum("bshv,hvd->bsd", out, params["wo"]), new_cache
+
+
+def init_mla_cache(cfg, batch: int, t_max: int, dtype=jnp.bfloat16):
+    return {"c_kv": jnp.zeros((batch, t_max, cfg.mla_kv_lora), dtype),
+            "k_rope": jnp.zeros((batch, t_max, cfg.mla_rope_dim), dtype),
+            "index": jnp.zeros((), jnp.int32)}

@@ -1,0 +1,147 @@
+"""Common layers: RMSNorm, rotary embeddings (full / partial / M-RoPE),
+GLU MLPs, embeddings.  Plain-pytree params; initializers are truncated
+normals scaled like standard LM inits."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding as shd
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _cdtype(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def normal(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+def init_rmsnorm(d: int, cfg) -> dict:
+    return {"scale": jnp.zeros((d,), _dtype(cfg))}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------- rope
+def rope_frequencies(head_rot: int, theta: float) -> jnp.ndarray:
+    exponent = jnp.arange(0, head_rot, 2, dtype=jnp.float32) / head_rot
+    return 1.0 / (theta ** exponent)                  # (head_rot/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float,
+               fraction: float = 1.0,
+               mrope_sections: tuple[int, ...] | None = None) -> jax.Array:
+    """Rotary embedding on (B, S, H, Dh).
+
+    positions: (B, S) int32, or (3, B, S) for M-RoPE (t/h/w streams).
+    fraction < 1 rotates only the first ``fraction * Dh`` dims
+    (ChatGLM's 2d/partial RoPE).  mrope_sections splits the rotated
+    half-dims into per-stream sections (Qwen2-VL M-RoPE).
+    """
+    dh = x.shape[-1]
+    rot = int(dh * fraction)
+    rot -= rot % 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    inv_freq = rope_frequencies(rot, theta)           # (rot/2,)
+    if mrope_sections is None:
+        if positions.ndim == 3:
+            positions = positions[0]
+        angles = positions[..., None].astype(jnp.float32) * inv_freq
+        # (B, S, rot/2) -> broadcast over heads
+        angles = angles[:, :, None, :]
+    else:
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        parts = []
+        start = 0
+        for sec, pos in zip(mrope_sections, positions):
+            f = inv_freq[start:start + sec]
+            parts.append(pos[..., None].astype(jnp.float32) * f)
+            start += sec
+        angles = jnp.concatenate(parts, axis=-1)[:, :, None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x_rot[..., ::2], x_rot[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([y.astype(x.dtype), x_pass], axis=-1)
+
+
+def default_mrope_sections(head_rot_half: int) -> tuple[int, int, int]:
+    """Qwen2-VL uses (16, 24, 24) for half-dim 64; scale proportionally."""
+    t = head_rot_half // 4
+    h = (head_rot_half - t) // 2
+    return (t, h, head_rot_half - t - h)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> jnp.ndarray:
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d_model, 2, jnp.float32)
+                  * (-math.log(10000.0) / d_model))
+    pe = jnp.zeros((seq_len, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ----------------------------------------------------------------------- mlp
+def init_glu_mlp(key, d_model: int, d_ff: int, cfg) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    return {
+        "w_gate": normal(k1, (d_model, d_ff), s_in, _dtype(cfg)),
+        "w_up": normal(k2, (d_model, d_ff), s_in, _dtype(cfg)),
+        "w_down": normal(k3, (d_ff, d_model), s_out, _dtype(cfg)),
+    }
+
+
+def glu_mlp(params: dict, x: jax.Array, kind: str) -> jax.Array:
+    act = jax.nn.silu if kind == "swiglu" else \
+        (lambda v: jax.nn.gelu(v, approximate=True))
+    h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = shd.shard(h, "batch", None, "mlp")
+    return h @ params["w_down"]
+
+
+# ----------------------------------------------------------------- embedding
+def init_embedding(key, cfg) -> dict:
+    v = cfg.padded_vocab
+    emb = normal(key, (v, cfg.d_model), 1.0, _dtype(cfg))
+    p = {"embedding": emb}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = normal(jax.random.fold_in(key, 1),
+                              (v, cfg.d_model),
+                              1.0 / math.sqrt(cfg.d_model), _dtype(cfg))
+    return p
+
+
+def embed(params: dict, tokens: jax.Array, cfg) -> jax.Array:
+    x = params["embedding"][tokens].astype(_cdtype(cfg))
+    if cfg.emb_scale:
+        x = x * math.sqrt(cfg.d_model)
+    return shd.shard(x, "batch", None, "embed")
+
+
+def unembed(params: dict, x: jax.Array, cfg) -> jax.Array:
+    table = params.get("lm_head", params["embedding"])
+    logits = x @ table.T.astype(_cdtype(cfg))
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = c * jnp.tanh(logits / c)
+    return shd.shard(logits, "batch", None, "vocab")

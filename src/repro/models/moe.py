@@ -1,0 +1,138 @@
+"""Mixture-of-Experts block (DeepSeek-V2 style: shared + routed experts,
+token-choice top-k routing) with GROUPED capacity dispatch.
+
+Tokens are reshaped into G groups (G ~ the number of data shards) and
+each group routes independently:
+
+  router -> top-k -> per-group argsort by expert -> capacity gather
+  -> batched expert GLU (einsum over the expert axis, which is sharded
+     over the 'model' mesh axis = expert parallelism)
+  -> weighted scatter-combine (GSPMD inserts the all-reduce over
+     'model'; hillclimbing this collective is one of the §Perf targets)
+
+Everything is static-shape: per-group capacity C = ceil(Ng*K/E * cf);
+overflow tokens drop to a dummy slot (standard dropping MoE).  The
+group axis is sharded over (pod, data); the expert axis over model.
+Load-balance aux loss follows Switch/DeepSeek: E * sum_e f_e p_e.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding as shd
+from repro.models.layers import normal
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_moe(key, cfg):
+    d = cfg.d_model
+    e = cfg.moe_num_experts
+    f = cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
+    p = {
+        "router": normal(ks[0], (d, e), s_in, jnp.float32),
+        "expert_gate": normal(ks[1], (e, d, f), s_in, _dt(cfg)),
+        "expert_up": normal(ks[2], (e, d, f), s_in, _dt(cfg)),
+        "expert_down": normal(ks[3], (e, f, d), s_out, _dt(cfg)),
+    }
+    if cfg.moe_num_shared:
+        fs = f * cfg.moe_num_shared
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": normal(kk[0], (d, fs), s_in, _dt(cfg)),
+            "w_up": normal(kk[1], (d, fs), s_in, _dt(cfg)),
+            "w_down": normal(kk[2], (fs, d), 1.0 / math.sqrt(fs),
+                             _dt(cfg)),
+        }
+    return p
+
+
+def _num_groups(n: int, target: int) -> int:
+    g = min(target, n)
+    while n % g:
+        g -= 1
+    return g
+
+
+def moe_block(params, x, cfg, *, group_target: int = 32):
+    """x: (B, S, D) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    n = b * s
+    g = _num_groups(n, group_target)
+    ng = n // g
+    cap = max(1, int(math.ceil(ng * k / e * cfg.moe_capacity_factor)))
+
+    xf = x.reshape(g, ng, d)
+    xf = shd.shard(xf, "batch", None, None)
+
+    logits = (xf.astype(jnp.float32) @ params["router"])      # (G,Ng,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                    # (G,Ng,K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux (Switch): E * sum_e fraction_e * prob_e
+    me = jnp.mean(probs, axis=(0, 1))                         # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=2),
+        axis=(0, 1)) / k
+    aux = e * jnp.sum(me * ce)
+
+    # --- per-group dispatch ---------------------------------------
+    ef = top_e.reshape(g, ng * k)                             # flat choices
+    wf = top_w.reshape(g, ng * k).astype(x.dtype)
+    order = jnp.argsort(ef, axis=-1)
+    sorted_e = jnp.take_along_axis(ef, order, axis=-1)
+    sorted_tok = order // k                                   # token ids
+    sorted_w = jnp.take_along_axis(wf, order, axis=-1)
+    counts = jax.vmap(lambda se: jnp.bincount(se, length=e))(sorted_e)
+    start = jnp.cumsum(counts, axis=-1) - counts              # (G,E)
+    pos = (jnp.arange(ng * k)[None, :]
+           - jnp.take_along_axis(start, sorted_e, axis=-1))
+    keep = pos < cap
+    dst = jnp.where(keep, sorted_e * cap + pos, e * cap)      # dummy slot
+
+    def scatter_i32(dstg, valg):
+        return jnp.zeros((e * cap + 1,), valg.dtype).at[dstg].set(valg)
+
+    disp_tok = jax.vmap(scatter_i32)(
+        dst, jnp.where(keep, sorted_tok, ng))[:, :-1]         # (G,E*C)
+    disp_w = jax.vmap(scatter_i32)(
+        dst, jnp.where(keep, sorted_w, 0.0))[:, :-1]
+
+    xpad = jnp.concatenate([xf, jnp.zeros((g, 1, d), xf.dtype)], axis=1)
+    xs = jnp.take_along_axis(xpad, disp_tok[..., None], axis=1)
+    xs = xs.reshape(g, e, cap, d)
+    xs = shd.shard(xs, "batch", "experts", None, None)
+
+    # --- expert computation (expert axis sharded over 'model') ----
+    h = (jax.nn.silu(jnp.einsum("gecd,edf->gecf", xs,
+                                params["expert_gate"]))
+         * jnp.einsum("gecd,edf->gecf", xs, params["expert_up"]))
+    h = shd.shard(h, "batch", "experts", None, "mlp")
+    ys = jnp.einsum("gecf,efd->gecd", h, params["expert_down"])
+    ys = ys.reshape(g, e * cap, d) * disp_w[..., None]
+
+    # --- combine ----------------------------------------------------
+    def combine(tok_g, ys_g):
+        out = jnp.zeros((ng + 1, d), ys_g.dtype)
+        return out.at[tok_g].add(ys_g)[:ng]
+
+    out = jax.vmap(combine)(disp_tok, ys)
+    out = shd.shard(out, "batch", None, None)
+    out = out.reshape(b, s, d)
+
+    if "shared" in params:
+        sp = params["shared"]
+        hs = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        out = out + hs @ sp["w_down"]
+    return out, aux

@@ -1,0 +1,365 @@
+"""Recurrent sequence mixers:
+
+  * mLSTM  (xLSTM [arXiv:2405.04517]) -- matrix-memory LSTM.  Training /
+    prefill uses the stabilized PARALLEL (quadratic) form chunked like
+    attention; decode uses the O(1) recurrent form with (C, n, m) state.
+  * sLSTM  (xLSTM) -- scalar-memory LSTM with exponential gating and
+    block-diagonal (per-head) recurrence; inherently sequential ->
+    lax.scan over time, O(1) decode.
+  * RG-LRU (Griffin / RecurrentGemma [arXiv:2402.19427]) -- gated linear
+    recurrence, parallelized with jax.lax.associative_scan (the
+    TPU-native replacement for the paper's CUDA linear-scan kernel).
+
+All blocks carry a causal conv1d where the source arch has one; decode
+keeps the last (width-1) inputs in the cache.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding as shd
+from repro.models.layers import init_rmsnorm, normal, rmsnorm
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ----------------------------------------------------------- causal conv1d
+def init_conv1d(key, width: int, channels: int, cfg):
+    return {"w": normal(key, (width, channels), 1.0 / math.sqrt(width),
+                        _dt(cfg)),
+            "b": jnp.zeros((channels,), _dt(cfg))}
+
+
+def causal_conv1d(params, x, buf=None):
+    """Depthwise causal conv.  x: (B,S,C).  buf: (B,W-1,C) history for
+    decode.  Returns (y, new_buf)."""
+    w = params["w"].shape[0]
+    if buf is None:
+        xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([buf.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * params["w"][i] for i in range(w))
+    y = y + params["b"]
+    new_buf = xp[:, -(w - 1):] if w > 1 else buf
+    return y, new_buf
+
+
+# ================================================================== mLSTM
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    inner = int(d * cfg.mlstm_proj_factor)
+    h = cfg.num_heads
+    dh = inner // h
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    si = 1.0 / math.sqrt(inner)
+    return {
+        "w_up": normal(ks[0], (d, 2 * inner), s, _dt(cfg)),
+        "conv": init_conv1d(ks[1], cfg.conv1d_width, inner, cfg),
+        "wq": normal(ks[2], (inner, h, dh), si, _dt(cfg)),
+        "wk": normal(ks[3], (inner, h, dh), si, _dt(cfg)),
+        "wv": normal(ks[4], (inner, h, dh), si, _dt(cfg)),
+        "w_gates": normal(ks[5], (inner, h, 2), si, _dt(cfg)),
+        "head_norm": init_rmsnorm(dh, cfg),
+        "w_down": normal(ks[6], (inner, d), si, _dt(cfg)),
+    }
+
+
+def _mlstm_parallel(q, k, v, i_pre, f_pre, chunk: int = 1024):
+    """Stabilized parallel mLSTM.  q,k,v: (B,S,H,Dh); gates: (B,S,H)."""
+    b, s, h, dh = q.shape
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))     # (B,S,H)
+    cumf = jnp.cumsum(logf, axis=1)                          # F_t
+    a = i_pre.astype(jnp.float32) - cumf + logf              # i_s - F_{s-1}
+    # m_t = F_{t-1}+logf_t? Use convention d_{t,s} = (F_t - F_s) + i_s for
+    # s <= t where F includes s's own gate once:  F_t - F_s + i_s
+    #   = cumf_t - cumf_s + i_s.
+    src = i_pre.astype(jnp.float32) - cumf                   # i_s - F_s
+    run_max = jax.lax.cummax(src, axis=1)                    # max_{s<=t}
+    m = cumf + run_max                                       # (B,S,H)
+    scale = 1.0 / math.sqrt(dh)
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cumf_q = jnp.pad(cumf, ((0, 0), (0, pad), (0, 0)))
+        m_q = jnp.pad(m, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    else:
+        cumf_q, m_q = cumf, m
+    nc = q.shape[1] // chunk
+    qc = jnp.moveaxis(q.reshape(b, nc, chunk, h, dh), 1, 0)
+    cumf_c = jnp.moveaxis(cumf_q.reshape(b, nc, chunk, h), 1, 0)
+    m_c = jnp.moveaxis(m_q.reshape(b, nc, chunk, h), 1, 0)
+    t_pos = jnp.arange(s)
+    chunk_pos = jnp.arange(nc * chunk).reshape(nc, chunk)
+
+    def one_chunk(args):
+        qq, ff, mm, qp = args                # (B,C,H,Dh),(B,C,H),(B,C,H)
+        dmat = (ff[:, :, None, :] - cumf[:, None, :, :]
+                + i_pre[:, None, :, :].astype(jnp.float32)
+                - mm[:, :, None, :])         # (B,C,S,H)
+        mask = t_pos[None, :] <= qp[:, None]
+        dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+        dec = jnp.exp(dmat)
+        scores = jnp.einsum("bchd,bshd->bcsh", qq, k,
+                            preferred_element_type=jnp.float32) * scale
+        sd = scores * dec
+        denom = jnp.maximum(jnp.abs(jnp.sum(sd, axis=2)),
+                            jnp.exp(-mm)) + 1e-6        # (B,C,H)
+        return jnp.einsum("bcsh,bshd->bchd",
+                          (sd / denom[:, :, None, :]).astype(v.dtype), v)
+
+    if nc == 1:
+        out = one_chunk((qc[0], cumf_c[0], m_c[0], chunk_pos[0]))[:, None]
+        out = jnp.moveaxis(out, 1, 0)
+    else:
+        # remat per chunk (same residency argument as dot_attention)
+        out = jax.lax.map(jax.checkpoint(one_chunk),
+                          (qc, cumf_c, m_c, chunk_pos))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, nc * chunk, h, dh)
+    return out[:, :s]
+
+
+def _mlstm_recurrent(q, k, v, i_pre, f_pre, state):
+    """One-step recurrent mLSTM.  q,k,v: (B,1,H,Dh)."""
+    b, _, h, dh = q.shape
+    qq, kk, vv = q[:, 0], k[:, 0], v[:, 0]
+    i_t = i_pre[:, 0].astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre[:, 0].astype(jnp.float32))
+    m_new = jnp.maximum(logf + state["m"], i_t)
+    i_s = jnp.exp(i_t - m_new)
+    f_s = jnp.exp(logf + state["m"] - m_new)
+    c = (f_s[..., None, None] * state["C"]
+         + i_s[..., None, None] * kk[..., :, None] * vv[..., None, :])
+    n = f_s[..., None] * state["n"] + i_s[..., None] * kk
+    scale = 1.0 / math.sqrt(dh)
+    num = jnp.einsum("bhd,bhdv->bhv", qq * scale, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qq * scale, n)),
+                      jnp.exp(-m_new)) + 1e-6
+    out = (num / den[..., None]).astype(v.dtype)[:, None]
+    return out, {"C": c, "n": n, "m": m_new}
+
+
+def _mlstm_final_state(k, v, i_pre, f_pre):
+    """Closed-form (C_T, n_T, m_T) after consuming a whole prompt --
+    the same stabilized sums the recurrence accumulates step by step:
+      m_T = F_T + max_s (i_s - F_s)
+      C_T = sum_s exp(F_T - F_s + i_s - m_T) k_s v_s^T
+    """
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))   # (B,S,H)
+    cumf = jnp.cumsum(logf, axis=1)
+    f_total = cumf[:, -1]                                  # (B,H)
+    src = i_pre.astype(jnp.float32) - cumf                 # i_s - F_s
+    m = f_total + jnp.max(src, axis=1)                     # (B,H)
+    wgt = jnp.exp(f_total[:, None] + src - m[:, None])     # (B,S,H)
+    c = jnp.einsum("bsh,bshd,bshv->bhdv", wgt,
+                   k.astype(jnp.float32), v.astype(jnp.float32))
+    n = jnp.einsum("bsh,bshd->bhd", wgt, k.astype(jnp.float32))
+    return {"C": c, "n": n, "m": m}
+
+
+def mlstm_block(params, x, cfg, cache=None):
+    b, s, d = x.shape
+    up = x @ params["w_up"]
+    inner = up.shape[-1] // 2
+    x_in, z = up[..., :inner], up[..., inner:]
+    buf = cache.get("conv") if cache else None
+    xc, new_buf = causal_conv1d(params["conv"], x_in, buf)
+    xc = jax.nn.silu(xc)
+    h = cfg.num_heads
+    q = jnp.einsum("bsi,ihd->bshd", xc, params["wq"])
+    k = jnp.einsum("bsi,ihd->bshd", xc, params["wk"])
+    v = jnp.einsum("bsi,ihd->bshd", x_in, params["wv"])
+    gates = jnp.einsum("bsi,ihg->bshg", xc, params["w_gates"])
+    i_pre, f_pre = gates[..., 0], gates[..., 1]
+
+    if cache is None:
+        out = _mlstm_parallel(q, k, v, i_pre, f_pre)
+        new_cache = None
+    elif s > 1:
+        # prefill: parallel output + closed-form final recurrent state
+        out = _mlstm_parallel(q, k, v, i_pre, f_pre)
+        new_cache = {"state": _mlstm_final_state(k, v, i_pre, f_pre),
+                     "conv": new_buf}
+    else:
+        out, new_state = _mlstm_recurrent(q, k, v, i_pre, f_pre,
+                                          cache["state"])
+        new_cache = {"state": new_state, "conv": new_buf}
+    out = rmsnorm(params["head_norm"], out, cfg.norm_eps)
+    out = out.reshape(b, s, inner) * jax.nn.silu(z)
+    return out @ params["w_down"], new_cache
+
+
+def init_mlstm_cache(cfg, batch: int, dtype=jnp.float32):
+    inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+    h = cfg.num_heads
+    dh = inner // h
+    return {"state": {"C": jnp.zeros((batch, h, dh, dh), dtype),
+                      "n": jnp.zeros((batch, h, dh), dtype),
+                      "m": jnp.full((batch, h), -1e30, dtype)},
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, inner),
+                              dtype)}
+
+
+# ================================================================== sLSTM
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    up = int(d * cfg.slstm_proj_factor)
+    return {
+        "w_x": normal(ks[0], (d, h, 4 * dh), s, _dt(cfg)),      # i,f,z,o
+        "w_rec": normal(ks[1], (h, dh, 4 * dh), 1.0 / math.sqrt(dh),
+                        _dt(cfg)),
+        "head_norm": init_rmsnorm(dh, cfg),
+        "w_in": normal(ks[2], (d, 2 * up), s, _dt(cfg)),
+        "w_out": normal(ks[3], (up, d), 1.0 / math.sqrt(up), _dt(cfg)),
+    }
+
+
+def _slstm_cell(pre, state, dh):
+    """pre: (B,H,4*Dh) gate pre-activations (x-part + R h already added).
+    state: dict(c,n,h,m) each (B,H,Dh)."""
+    i_pre = pre[..., :dh].astype(jnp.float32)
+    f_pre = pre[..., dh:2 * dh].astype(jnp.float32)
+    z_pre = pre[..., 2 * dh:3 * dh]
+    o_pre = pre[..., 3 * dh:]
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(logf + state["m"] - m_new)
+    c = f_s * state["c"] + i_s * jnp.tanh(z_pre.astype(jnp.float32))
+    n = f_s * state["n"] + i_s
+    hid = (jax.nn.sigmoid(o_pre.astype(jnp.float32)) * c
+           / jnp.maximum(n, 1.0))
+    return {"c": c, "n": n, "h": hid, "m": m_new}
+
+
+def slstm_block(params, x, cfg, cache=None):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    pre_x = jnp.einsum("bsd,dhg->bshg", x, params["w_x"])   # (B,S,H,4Dh)
+
+    def scan_from(state0):
+        def step(st, pre_t):
+            pre = pre_t + jnp.einsum("bhd,hdg->bhg",
+                                     st["h"].astype(pre_t.dtype),
+                                     params["w_rec"])
+            st = _slstm_cell(pre, st, dh)
+            return st, st["h"]
+
+        fin, hs = jax.lax.scan(step, state0, jnp.moveaxis(pre_x, 1, 0))
+        return fin, jnp.moveaxis(hs, 0, 1)                  # (B,S,H,Dh)
+
+    if cache is None or s > 1:
+        state0 = cache["state"] if cache is not None else None
+        if state0 is None:
+            state0 = {k: jnp.zeros((b, h, dh), jnp.float32)
+                      for k in ("c", "n", "h")}
+            state0["m"] = jnp.full((b, h, dh), -1e30, jnp.float32)
+        fin, hidden = scan_from(state0)
+        new_cache = {"state": fin} if cache is not None else None
+    else:
+        st = cache["state"]
+        pre = pre_x[:, 0] + jnp.einsum("bhd,hdg->bhg",
+                                       st["h"].astype(pre_x.dtype),
+                                       params["w_rec"])
+        st = _slstm_cell(pre, st, dh)
+        hidden = st["h"][:, None]
+        new_cache = {"state": st}
+    hidden = rmsnorm(params["head_norm"], hidden.astype(x.dtype),
+                     cfg.norm_eps).reshape(b, -1, d)
+    up = hidden @ params["w_in"]
+    half = up.shape[-1] // 2
+    out = jax.nn.gelu(up[..., :half], approximate=True) * up[..., half:]
+    return out @ params["w_out"], new_cache
+
+
+def init_slstm_cache(cfg, batch: int, dtype=jnp.float32):
+    h = cfg.num_heads
+    dh = cfg.d_model // h
+    st = {k: jnp.zeros((batch, h, dh), dtype) for k in ("c", "n", "h")}
+    st["m"] = jnp.full((batch, h, dh), -1e30, dtype)
+    return {"state": st}
+
+
+# ================================================================== RG-LRU
+RGLRU_C = 8.0
+
+
+def init_rglru(key, cfg):
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    sw = 1.0 / math.sqrt(w)
+    # Lambda init so a = exp(-c*softplus(L)) is in (0.9, 0.999)
+    lam0 = jnp.linspace(-4.0, -1.0, w)
+    return {
+        "w_in": normal(ks[0], (d, w), s, _dt(cfg)),
+        "w_gate_branch": normal(ks[1], (d, w), s, _dt(cfg)),
+        "conv": init_conv1d(ks[2], cfg.conv1d_width, w, cfg),
+        "w_r": normal(ks[3], (w, w), sw, _dt(cfg)),
+        "w_i": normal(ks[4], (w, w), sw, _dt(cfg)),
+        "lam": lam0.astype(jnp.float32),
+        "w_out": normal(ks[5], (w, d), sw, _dt(cfg)),
+    }
+
+
+def _rglru_scan(x, r, i, lam):
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t), associative scan."""
+    log_a = (-RGLRU_C * jax.nn.softplus(lam)
+             * jax.nn.sigmoid(r.astype(jnp.float32)))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * jax.nn.sigmoid(i.astype(jnp.float32)) * x.astype(jnp.float32)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h
+
+
+def rglru_block(params, x, cfg, cache=None):
+    b, s, d = x.shape
+    branch = jax.nn.gelu(x @ params["w_gate_branch"], approximate=True)
+    xi = x @ params["w_in"]
+    buf = cache.get("conv") if cache else None
+    xc, new_buf = causal_conv1d(params["conv"], xi, buf)
+    r = xc @ params["w_r"]
+    i = xc @ params["w_i"]
+    if cache is None or s > 1:
+        h = _rglru_scan(xc, r, i, params["lam"])
+        new_cache = None
+        if cache is not None:                # prefill: keep final state
+            new_cache = {"h": h[:, -1], "conv": new_buf}
+    else:
+        log_a = (-RGLRU_C * jax.nn.softplus(params["lam"])
+                 * jax.nn.sigmoid(r[:, 0].astype(jnp.float32)))
+        a = jnp.exp(log_a)
+        gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+            * jax.nn.sigmoid(i[:, 0].astype(jnp.float32)) \
+            * xc[:, 0].astype(jnp.float32)
+        h_new = a * cache["h"] + gated
+        h = h_new[:, None]
+        new_cache = {"h": h_new, "conv": new_buf}
+    out = (h.astype(x.dtype) * branch) @ params["w_out"]
+    return out, new_cache
+
+
+def init_rglru_cache(cfg, batch: int, dtype=jnp.float32):
+    w = cfg.rglru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), dtype),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype)}

@@ -1,0 +1,410 @@
+"""Model assembly: decoder-only (all families) and encoder-decoder
+(whisper).  Layers are scanned over the block-pattern period with remat;
+per-layer parameters are stacked (L/period leading axis) so the HLO
+stays one-period-sized regardless of depth (95-layer deepseek-67b
+compiles as one scanned block).
+
+Block kinds (cfg.block_pattern):
+  attn        GQA or MLA self-attention + MLP   (window = cfg.window)
+  local_attn  GQA with cfg.local_window sliding window + MLP
+  rglru       RG-LRU recurrent mixer + MLP      (Griffin residual pair)
+  mlstm       mLSTM block (carries its own projections, no MLP)
+  slstm       sLSTM block (ditto)
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models import sharding as shd
+from repro.models.layers import (embed, glu_mlp, init_embedding,
+                                 init_glu_mlp, init_rmsnorm, rmsnorm,
+                                 sinusoidal_positions, unembed)
+
+# ------------------------------------------------------------------ blocks
+_HAS_MLP = {"attn", "local_attn", "rglru"}
+
+
+def _init_mixer(key, kind: str, cfg):
+    if kind in ("attn", "local_attn"):
+        if cfg.attention_kind == "mla" and kind == "attn":
+            return attn.init_mla(key, cfg)
+        return attn.init_gqa(key, cfg)
+    if kind == "rglru":
+        return ssm.init_rglru(key, cfg)
+    if kind == "mlstm":
+        return ssm.init_mlstm(key, cfg)
+    if kind == "slstm":
+        return ssm.init_slstm(key, cfg)
+    raise ValueError(kind)
+
+
+def init_block(key, kind: str, cfg, *, mlp: str | None = None,
+               cross: bool = False):
+    """mlp: None -> cfg.mlp_kind; "dense" forces a dense GLU (deepseek
+    first layer); "moe" forces MoE."""
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {
+        "norm1": init_rmsnorm(cfg.d_model, cfg),
+        "mixer": _init_mixer(ks[0], kind, cfg),
+    }
+    if cross:
+        p["norm_x"] = init_rmsnorm(cfg.d_model, cfg)
+        p["cross"] = attn.init_cross(ks[1], cfg)
+    if kind in _HAS_MLP:
+        p["norm2"] = init_rmsnorm(cfg.d_model, cfg)
+        mlp_kind = mlp or cfg.mlp_kind
+        if mlp_kind == "moe":
+            p["mlp"] = moe_mod.init_moe(ks[2], cfg)
+        else:
+            p["mlp"] = init_glu_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg)
+    return p
+
+
+def apply_block(params, kind: str, x, cfg, *, positions, cache=None,
+                enc_out=None, mlp_kind: str | None = None):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    new_cache = dict(cache) if cache is not None else None
+    if kind in ("attn", "local_attn"):
+        window = cfg.local_window if kind == "local_attn" else cfg.window
+        sub = cache.get("self") if cache else None
+        if cfg.attention_kind == "mla" and kind == "attn":
+            out, sub_new = attn.mla_attention(
+                params["mixer"], h, cfg=cfg, positions=positions,
+                cache=sub)
+        else:
+            out, sub_new = attn.gqa_attention(
+                params["mixer"], h, cfg=cfg, positions=positions,
+                causal=True, window=window, cache=sub)
+        if cache is not None:
+            new_cache["self"] = sub_new
+    elif kind == "rglru":
+        out, sub_new = ssm.rglru_block(params["mixer"], h, cfg,
+                                       cache=cache.get("self")
+                                       if cache else None)
+        if cache is not None:
+            new_cache["self"] = sub_new
+    elif kind == "mlstm":
+        out, sub_new = ssm.mlstm_block(params["mixer"], h, cfg,
+                                       cache=cache.get("self")
+                                       if cache else None)
+        if cache is not None:
+            new_cache["self"] = sub_new
+    elif kind == "slstm":
+        out, sub_new = ssm.slstm_block(params["mixer"], h, cfg,
+                                       cache=cache.get("self")
+                                       if cache else None)
+        if cache is not None:
+            new_cache["self"] = sub_new
+    else:
+        raise ValueError(kind)
+    x = x + out
+
+    if "cross" in params:
+        h = rmsnorm(params["norm_x"], x, cfg.norm_eps)
+        if enc_out is None and cache is not None and "cross_kv" in cache:
+            ckv = (cache["cross_kv"]["k"], cache["cross_kv"]["v"])
+        else:
+            ck = jnp.einsum("btd,dhk->bthk", enc_out,
+                            params["cross"]["wk"])
+            cv = jnp.einsum("btd,dhk->bthk", enc_out,
+                            params["cross"]["wv"])
+            ckv = (ck, cv)
+            if cache is not None:
+                new_cache["cross_kv"] = {"k": ck, "v": cv}
+        out, _ = attn.gqa_attention(params["cross"], h, cfg=cfg,
+                                    positions=positions, cross_kv=ckv)
+        x = x + out
+
+    if kind in _HAS_MLP:
+        h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if (mlp_kind or cfg.mlp_kind) == "moe" and "router" in params["mlp"]:
+            out, aux = moe_mod.moe_block(params["mlp"], h, cfg)
+        else:
+            out = glu_mlp(params["mlp"], h,
+                          "geglu" if cfg.mlp_kind == "geglu" else "swiglu")
+        x = x + out
+    return x, new_cache, aux
+
+
+def init_block_cache(kind: str, cfg, batch: int, t_max: int, *,
+                     cross_len: int = 0, cache_dtype=jnp.bfloat16):
+    c: dict[str, Any] = {}
+    if kind in ("attn", "local_attn"):
+        window = cfg.local_window if kind == "local_attn" else cfg.window
+        if cfg.attention_kind == "mla" and kind == "attn":
+            c["self"] = attn.init_mla_cache(cfg, batch, t_max, cache_dtype)
+        else:
+            c["self"] = attn.init_gqa_cache(cfg, batch, t_max,
+                                            window=window,
+                                            dtype=cache_dtype)
+    elif kind == "rglru":
+        c["self"] = ssm.init_rglru_cache(cfg, batch)
+    elif kind == "mlstm":
+        c["self"] = ssm.init_mlstm_cache(cfg, batch)
+    elif kind == "slstm":
+        c["self"] = ssm.init_slstm_cache(cfg, batch)
+    if cross_len:
+        kv, dh = cfg.num_kv_heads, cfg.head_dim
+        c["cross_kv"] = {"k": jnp.zeros((batch, cross_len, kv, dh),
+                                        cache_dtype),
+                         "v": jnp.zeros((batch, cross_len, kv, dh),
+                                        cache_dtype)}
+    return c
+
+
+# ------------------------------------------------------------------- model
+class LayerPlan(NamedTuple):
+    """Static layout of the layer stack."""
+    head: tuple[tuple[str, str | None], ...]   # (kind, mlp) unscanned
+    period: tuple[str, ...]                    # scanned pattern
+    n_periods: int
+    tail: tuple[str, ...]                      # remainder (kind only)
+    scan_mlp: str | None                       # mlp kind inside the scan
+
+
+def layer_plan(cfg) -> LayerPlan:
+    head: list[tuple[str, str | None]] = []
+    n_layers = cfg.num_layers
+    if cfg.first_dense_layers:
+        for _ in range(cfg.first_dense_layers):
+            head.append((cfg.block_pattern[0], "dense"))
+        n_layers -= cfg.first_dense_layers
+    p = len(cfg.block_pattern)
+    n_periods = n_layers // p
+    rem = n_layers - n_periods * p
+    tail = cfg.block_pattern[:rem]
+    return LayerPlan(head=tuple(head), period=cfg.block_pattern,
+                     n_periods=n_periods, tail=tail,
+                     scan_mlp=cfg.mlp_kind)
+
+
+def init_params(key, cfg, *, is_encoder: bool = False,
+                cross: bool = False, num_layers: int | None = None):
+    """Parameters for one block stack (+ embeddings at top level)."""
+    plan = layer_plan(cfg)
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+    params["head"] = [
+        init_block(jax.random.fold_in(keys[0], i), kind, cfg, mlp=mlp,
+                   cross=cross)
+        for i, (kind, mlp) in enumerate(plan.head)]
+    stacked = []
+    for j, kind in enumerate(plan.period):
+        def make(i, j=j, kind=kind):
+            return init_block(jax.random.fold_in(keys[1], i * 31 + j),
+                              kind, cfg, cross=cross)
+        if plan.n_periods:
+            stacked.append(jax.vmap(make)(jnp.arange(plan.n_periods)))
+        else:
+            stacked.append(None)
+    params["blocks"] = stacked
+    params["tail"] = [
+        init_block(jax.random.fold_in(keys[2], i), kind, cfg, cross=cross)
+        for i, kind in enumerate(plan.tail)]
+    params["final_norm"] = init_rmsnorm(cfg.d_model, cfg)
+    return params
+
+
+def apply_stack(params, cfg, x, *, positions, cache=None, enc_out=None,
+                remat: bool = True):
+    """Run head + scanned periods + tail.  Returns (x, new_cache, aux)."""
+    plan = layer_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: dict[str, Any] = {} if cache is not None else None
+
+    for i, (kind, mlp) in enumerate(plan.head):
+        sub = cache["head"][i] if cache is not None else None
+        x, c_new, aux = apply_block(params["head"][i], kind, x, cfg,
+                                    positions=positions, cache=sub,
+                                    enc_out=enc_out, mlp_kind=mlp)
+        aux_total += aux
+        if cache is not None:
+            new_cache.setdefault("head", []).append(c_new)
+
+    if plan.n_periods and not cfg.scan_layers:
+        # UNROLLED path: same math as the scan below, but each period is
+        # emitted separately so cost_analysis / collective counts scale
+        # with depth (the dry-run roofline uses this; scan counts the
+        # body once).  Remat per period keeps activation memory equal.
+        def one_period(xx, aux_c, p_stack, c_stack):
+            if cfg.shard_acts:
+                xx = shd.shard(xx, "batch", None, "act_embed")
+            c_out = []
+            for j, kind in enumerate(plan.period):
+                xx, c_new, aux = apply_block(
+                    p_stack[j], kind, xx, cfg, positions=positions,
+                    cache=c_stack[j] if c_stack is not None else None,
+                    enc_out=enc_out)
+                c_out.append(c_new)
+                aux_c = aux_c + aux
+            return xx, aux_c, c_out
+
+        body = jax.checkpoint(one_period,
+                              static_argnums=()) if remat else one_period
+        cache_outs = []
+        for i in range(plan.n_periods):
+            p_i = jax.tree.map(lambda a: a[i], params["blocks"])
+            c_i = (jax.tree.map(lambda a: a[i], cache["blocks"])
+                   if cache is not None else None)
+            x, aux_total, c_out = body(x, aux_total, p_i, c_i)
+            cache_outs.append(c_out)
+        if cache is not None:
+            new_cache["blocks"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *cache_outs)
+    elif plan.n_periods:
+        def period_fn(carry, xs):
+            xx, aux_c = carry
+            if cfg.shard_acts:
+                xx = shd.shard(xx, "batch", None, "act_embed")
+            p_stack = xs[0]
+            c_stack = xs[1] if cache is not None else [None] * len(
+                plan.period)
+            c_out = []
+            for j, kind in enumerate(plan.period):
+                xx, c_new, aux = apply_block(
+                    p_stack[j], kind, xx, cfg, positions=positions,
+                    cache=c_stack[j], enc_out=enc_out)
+                c_out.append(c_new)
+                aux_c = aux_c + aux
+            ys = c_out if cache is not None else 0
+            return (xx, aux_c), ys
+
+        body = jax.checkpoint(period_fn) if remat else period_fn
+        xs = (params["blocks"],
+              cache["blocks"] if cache is not None else None)
+        if cache is None:
+            xs = (params["blocks"], None)
+
+            def body2(carry, p_stack):
+                return body(carry, (p_stack, None))
+            (x, aux_total), _ = jax.lax.scan(body2, (x, aux_total),
+                                             params["blocks"])
+        else:
+            (x, aux_total), cache_out = jax.lax.scan(
+                body, (x, aux_total),
+                (params["blocks"], cache["blocks"]))
+            new_cache["blocks"] = cache_out
+
+    for i, kind in enumerate(plan.tail):
+        sub = cache["tail"][i] if cache is not None else None
+        x, c_new, aux = apply_block(params["tail"][i], kind, x, cfg,
+                                    positions=positions, cache=sub,
+                                    enc_out=enc_out)
+        aux_total += aux
+        if cache is not None:
+            new_cache.setdefault("tail", []).append(c_new)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, new_cache, aux_total
+
+
+def init_stack_cache(cfg, batch: int, t_max: int, *, cross_len: int = 0,
+                     cache_dtype=jnp.bfloat16):
+    plan = layer_plan(cfg)
+    cache: dict[str, Any] = {}
+    cache["head"] = [init_block_cache(kind, cfg, batch, t_max,
+                                      cross_len=cross_len,
+                                      cache_dtype=cache_dtype)
+                     for kind, _ in plan.head]
+    stacked = []
+    for j, kind in enumerate(plan.period):
+        def make(_i, kind=kind):
+            return init_block_cache(kind, cfg, batch, t_max,
+                                    cross_len=cross_len,
+                                    cache_dtype=cache_dtype)
+        stacked.append(jax.vmap(make)(jnp.arange(plan.n_periods))
+                       if plan.n_periods else None)
+    cache["blocks"] = stacked
+    cache["tail"] = [init_block_cache(kind, cfg, batch, t_max,
+                                      cross_len=cross_len,
+                                      cache_dtype=cache_dtype)
+                     for kind in plan.tail]
+    return cache
+
+
+# ------------------------------------------------------------- full models
+def init_lm(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {"embed": init_embedding(k1, cfg),
+              "decoder": init_params(k2, cfg,
+                                     cross=cfg.is_encoder_decoder)}
+    if cfg.is_encoder_decoder:
+        import dataclasses
+        enc_cfg = dataclasses.replace(
+            cfg, num_layers=cfg.enc_layers, block_pattern=("attn",),
+            first_dense_layers=0, window=0)
+        params["encoder"] = init_params(k3, enc_cfg)
+    return params
+
+
+def _encoder_cfg(cfg):
+    import dataclasses
+    return dataclasses.replace(cfg, num_layers=cfg.enc_layers,
+                               block_pattern=("attn",),
+                               first_dense_layers=0, window=0,
+                               rope_kind="none")
+
+
+def encode(params, cfg, frames: jax.Array):
+    """Whisper encoder over stub frame embeddings (B, T_enc, D):
+    bidirectional self-attention (mask trick: huge window + non-causal
+    positions) + sinusoidal positions."""
+    enc_cfg = _encoder_cfg(cfg)
+    b, t, _ = frames.shape
+    pe = sinusoidal_positions(t, cfg.d_model).astype(frames.dtype)
+    x = frames + pe[None]
+    # bidirectional: feed positions that make causal masking a no-op
+    positions = jnp.broadcast_to(jnp.full((t,), t - 1, jnp.int32)[None],
+                                 (b, t))
+    x, _, _ = apply_stack(params["encoder"], enc_cfg, x,
+                          positions=positions)
+    return x
+
+
+def forward(params, cfg, tokens, *, positions=None, vision_embeds=None,
+            vision_mask=None, enc_frames=None, cache=None,
+            pos_offset=None):
+    """Full forward.  Returns (logits, new_cache, aux)."""
+    b, s = tokens.shape
+    if positions is None:
+        base = jnp.arange(s, dtype=jnp.int32)
+        if pos_offset is not None:
+            base = base + pos_offset
+        positions = jnp.broadcast_to(base[None], (b, s))
+        if cfg.rope_kind == "mrope":
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+    x = embed(params["embed"], tokens, cfg)
+    if cfg.vision_embeds and vision_embeds is not None:
+        x = jnp.where(vision_mask[..., None],
+                      vision_embeds.astype(x.dtype), x)
+    if cfg.is_encoder_decoder:
+        pe = sinusoidal_positions(cfg.max_seq_len
+                                  if cfg.max_seq_len < 1 << 17
+                                  else 1 << 17, cfg.d_model)
+        off = pos_offset if pos_offset is not None else 0
+        pe_s = jax.lax.dynamic_slice_in_dim(pe, off, s, axis=0)
+        x = x + pe_s[None].astype(x.dtype)
+    enc_out = None
+    if cfg.is_encoder_decoder and enc_frames is not None:
+        enc_out = encode(params, cfg, enc_frames)
+    x, new_cache, aux = apply_stack(params["decoder"], cfg, x,
+                                    positions=positions, cache=cache,
+                                    enc_out=enc_out)
+    logits = unembed(params["embed"], x, cfg)
+    return logits, new_cache, aux
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params)
+               if hasattr(x, "size"))

@@ -1,0 +1,2 @@
+"""Serving runtime: prefill + batched single-token decode with
+per-family caches (KV / compressed-KV / ring / recurrent state)."""

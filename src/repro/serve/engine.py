@@ -1,0 +1,92 @@
+"""Serving engine.
+
+``prefill``      run the prompt through the model, filling the cache.
+``decode_step``  one token for the whole batch against the cache
+                 (this is what the decode_32k / long_500k shapes lower).
+``generate``     greedy/temperature sampling loop (examples + tests).
+
+Cache layout comes from transformer.init_stack_cache; recurrent archs
+(xlstm, recurrentgemma) keep O(1) state instead of KV, sliding-window
+attention keeps a ring buffer of ``window`` entries -- these are what
+make long_500k sub-quadratic (DESIGN.md shape applicability).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+
+
+class ServeState(NamedTuple):
+    cache: Any
+    last_logits: jax.Array
+    pos: jax.Array             # next position index
+
+
+def init_cache(cfg, batch: int, max_len: int, cache_dtype=jnp.bfloat16):
+    cross = cfg.enc_frames if cfg.is_encoder_decoder else 0
+    return tf.init_stack_cache(cfg, batch, max_len, cross_len=cross,
+                               cache_dtype=cache_dtype)
+
+
+def prefill(params, cfg, tokens, *, max_len: int, enc_frames=None,
+            vision_embeds=None, vision_mask=None,
+            cache_dtype=jnp.bfloat16) -> ServeState:
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len, cache_dtype)
+    logits, cache, _ = tf.forward(
+        params, cfg, tokens, cache=cache, enc_frames=enc_frames,
+        vision_embeds=vision_embeds, vision_mask=vision_mask,
+        pos_offset=jnp.zeros((), jnp.int32))
+    return ServeState(cache=cache, last_logits=logits[:, -1],
+                      pos=jnp.full((), s, jnp.int32))
+
+
+def decode_step(params, cfg, tokens, state: ServeState) -> ServeState:
+    """tokens: (B, 1) next input token per sequence."""
+    logits, cache, _ = tf.forward(params, cfg, tokens, cache=state.cache,
+                                  pos_offset=state.pos)
+    return ServeState(cache=cache, last_logits=logits[:, -1],
+                      pos=state.pos + 1)
+
+
+def sample(logits, key, temperature: float = 0.0):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "steps",
+                                             "temperature"))
+def _decode_loop(params, cfg, state: ServeState, key, steps: int,
+                 temperature: float):
+    def body(carry, _):
+        st, k = carry
+        k, sub = jax.random.split(k)
+        tok = sample(st.last_logits, sub, temperature)
+        st = decode_step(params, cfg, tok[:, None], st)
+        return (st, k), tok
+
+    (state, _), toks = jax.lax.scan(body, (state, key), None,
+                                    length=steps)
+    return state, jnp.moveaxis(toks, 0, 1)       # (B, steps)
+
+
+def generate(params, cfg, prompt_tokens, *, steps: int,
+             temperature: float = 0.0, seed: int = 0,
+             enc_frames=None, vision_embeds=None, vision_mask=None,
+             max_len: int | None = None):
+    """Batched generation; returns (B, steps) generated token ids."""
+    b, s = prompt_tokens.shape
+    max_len = max_len or (s + steps)
+    state = prefill(params, cfg, prompt_tokens, max_len=max_len,
+                    enc_frames=enc_frames, vision_embeds=vision_embeds,
+                    vision_mask=vision_mask)
+    _, toks = _decode_loop(params, cfg, state, jax.random.key(seed),
+                           steps, temperature)
+    return toks

@@ -1,0 +1,1 @@
+"""Training runtime: AdamW, train_step, loop, checkpointing."""

@@ -1,0 +1,47 @@
+"""Flat-npz checkpointing for arbitrary pytrees (params / opt states /
+solver states).  Paths are '/'-joined tree keys; restore rebuilds into a
+reference pytree structure."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    out = {}
+
+    def visit(path, leaf):
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        out["/".join(keys)] = np.asarray(leaf)
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return out
+
+
+def save(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def restore(path: str, like):
+    """Load into the structure of ``like`` (dtypes preserved from disk)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(_flatten(like).keys())
+    assert len(keys) == len(leaves_like)
+    new_leaves = [jax.numpy.asarray(data[k]) for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

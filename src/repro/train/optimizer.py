@@ -1,0 +1,89 @@
+"""AdamW with mixed-precision discipline:
+
+  * bf16 parameters (what the model computes with),
+  * fp32 master copy,
+  * (m, v) in a configurable dtype (bf16 for the >=67B configs --
+    DESIGN.md notes the single-pod fp32-Adam 236B config does not fit).
+
+Pure-pytree, no optax dependency.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+    warmup_steps: int = 100
+
+
+class OptState(NamedTuple):
+    master: Any      # fp32 copy of params
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def init(params, cfg: AdamWConfig) -> OptState:
+    sd = jnp.dtype(cfg.state_dtype)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    zeros = lambda p: jnp.zeros_like(p, dtype=sd)  # noqa: E731
+    return OptState(master=master,
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def apply(grads, opt_state: OptState, params, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, grad_norm)."""
+    sd = jnp.dtype(cfg.state_dtype)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    step = opt_state.step + 1
+    lr = _schedule(cfg, opt_state.step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        update = (m32 / b1c) / (jnp.sqrt(v32 / b2c) + cfg.eps)
+        new_master = master - lr * (update + cfg.weight_decay * master)
+        return m32.astype(sd), v32.astype(sd), new_master
+
+    m_new, v_new, master_new = [], [], []
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(opt_state.m)
+    flat_v = jax.tree.leaves(opt_state.v)
+    flat_ma = jax.tree.leaves(opt_state.master)
+    for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_ma):
+        mm, vv, nm = upd(g, m, v, ma)
+        m_new.append(mm)
+        v_new.append(vv)
+        master_new.append(nm)
+    master_t = jax.tree.unflatten(tree, master_new)
+    params_new = jax.tree.map(
+        lambda ma, p: ma.astype(p.dtype), master_t, params)
+    new_state = OptState(master=master_t,
+                         m=jax.tree.unflatten(tree, m_new),
+                         v=jax.tree.unflatten(tree, v_new),
+                         step=step)
+    return params_new, new_state, gnorm

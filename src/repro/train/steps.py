@@ -1,0 +1,78 @@
+"""train_step / eval_step for the model zoo.
+
+``Batch`` mirrors what input_specs() provides per architecture family:
+tokens/targets always; vision embeddings for VLM; encoder frames for
+audio.  Loss is next-token CE with the padded-vocab tail masked out.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.train import optimizer as opt
+
+AUX_WEIGHT = 0.01
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: opt.OptState
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  vocab_size: int) -> jax.Array:
+    """Mean next-token CE; ignores the padded-vocab tail.
+
+    Deliberately gather-free: the vocab axis is model-sharded, and a
+    take_along_axis over a sharded axis makes GSPMD all-gather the full
+    fp32 logits (measured: +8 GiB/device on the train_4k dry-run).  The
+    iota-mask formulation keeps every op elementwise/reduce, which
+    partitions cleanly."""
+    logits = logits.astype(jnp.float32)
+    v = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (v,), 0)
+    if v != vocab_size:
+        logits = jnp.where(iota < vocab_size, logits, -1e30)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = iota == targets[..., None]
+    picked = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    return jnp.mean(lse - picked)
+
+
+def loss_fn(params, cfg, batch: dict):
+    kw = {}
+    for k in ("vision_embeds", "vision_mask", "enc_frames", "positions"):
+        if k in batch:
+            kw[k] = batch[k]
+    logits, _, aux = tf.forward(params, cfg, batch["tokens"], **kw)
+    ce = cross_entropy(logits, batch["targets"], cfg.vocab_size)
+    return ce + AUX_WEIGHT * aux, (ce, aux)
+
+
+def make_train_step(cfg, opt_cfg: opt.AdamWConfig):
+    def train_step(state: TrainState, batch: dict):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, cfg, batch)
+        params, opt_state, gnorm = opt.apply(
+            grads, state.opt_state, state.params, opt_cfg)
+        metrics = {"loss": loss, "ce": ce, "aux": aux,
+                   "grad_norm": gnorm}
+        return TrainState(params, opt_state), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        loss, (ce, aux) = loss_fn(params, cfg, batch)
+        return {"loss": loss, "ce": ce}
+    return eval_step
+
+
+def init_train_state(key, cfg, opt_cfg: opt.AdamWConfig) -> TrainState:
+    params = tf.init_lm(key, cfg)
+    return TrainState(params=params, opt_state=opt.init(params, opt_cfg))

@@ -1,0 +1,75 @@
+"""Parse collective traffic out of (post-SPMD, per-device) HLO text.
+
+cost_analysis() reports FLOPs and bytes but NOT collective traffic, so
+we scan the partitioned module for all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops and sum their
+result-shape bytes (a per-device proxy for link traffic; ring
+algorithms move ~(n-1)/n of that per hop, which we fold into the link
+bandwidth constant)."""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import NamedTuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+class CollectiveStats(NamedTuple):
+    bytes_by_op: dict[str, int]
+    count_by_op: dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    bytes_by = defaultdict(int)
+    count_by = defaultdict(int)
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(?:-start|-done)?\(", line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue                     # avoid double counting start/done
+        b = _shape_bytes(shape_str)
+        if b:
+            bytes_by[op] += b
+            count_by[op] += 1
+    return CollectiveStats(dict(bytes_by), dict(count_by))
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\s{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,121 @@
+"""Roofline terms for TPU v5e from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per device)
+    memory term     = HLO_bytes / HBM_bw               (per device)
+    collective term = collective_bytes / link_bw       (per device)
+
+cost_analysis() and as_text() both describe the post-SPMD per-device
+module, so no further division by chip count is needed; the "chips x"
+normalization in the brief is already folded in by partitioning.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from repro.utils.hlo_analysis import CollectiveStats, collective_stats
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (x ~3 usable links/chip)
+ICI_LINKS = 3.0
+
+
+class Roofline(NamedTuple):
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collectives: CollectiveStats
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower bound assuming perfect overlap."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def mfu(self, model_flops_per_device: float) -> float:
+        """model FLOPs utilization against the roofline step time."""
+        t = self.step_time_s
+        return model_flops_per_device / (t * PEAK_FLOPS) if t else 0.0
+
+
+def analyze(compiled, lowered_text: str | None = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = lowered_text or compiled.as_text()
+    coll = collective_stats(text)
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, collective_bytes=coll.total_bytes,
+        collectives=coll,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=hbm / HBM_BW,
+        collective_s=coll.total_bytes / (ICI_BW * ICI_LINKS),
+    )
+
+
+def model_flops(cfg, shape_kind: str, tokens: int) -> float:
+    """6 * N_active * tokens (training) or 2 * N_active * tokens
+    (forward-only: prefill/decode)."""
+    n = active_param_count(cfg)
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def active_param_count(cfg) -> float:
+    """Approximate active parameters per token (MoE: top-k + shared)."""
+    d, l = cfg.d_model, cfg.num_layers
+    emb = cfg.padded_vocab * d * (1 if cfg.tie_embeddings else 2)
+    per_layer = 0.0
+    kinds = list(cfg.block_pattern)
+    for i in range(l):
+        kind = kinds[i % len(kinds)] if i >= cfg.first_dense_layers \
+            else kinds[0]
+        if kind in ("attn", "local_attn"):
+            if cfg.attention_kind == "mla" and kind == "attn":
+                lora, rope = cfg.mla_kv_lora, cfg.mla_rope_dim
+                vd = cfg.mla_v_dim or cfg.head_dim
+                h = cfg.num_heads
+                qp = (d * cfg.mla_q_lora
+                      + cfg.mla_q_lora * h * (cfg.head_dim + rope)) \
+                    if cfg.mla_q_lora else d * h * (cfg.head_dim + rope)
+                per_layer += (qp + d * (lora + rope)
+                              + lora * h * (cfg.head_dim + vd)
+                              + h * vd * d)
+            else:
+                per_layer += d * cfg.head_dim * (
+                    cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+            if i < cfg.first_dense_layers or cfg.mlp_kind != "moe":
+                per_layer += 3 * d * cfg.d_ff
+            else:
+                active_e = cfg.moe_top_k + cfg.moe_num_shared
+                per_layer += 3 * d * cfg.moe_d_ff * active_e
+        elif kind == "rglru":
+            w = cfg.rglru_width or d
+            per_layer += d * w * 2 + w * w * 2 + w * d + 3 * d * cfg.d_ff
+        elif kind == "mlstm":
+            inner = int(d * cfg.mlstm_proj_factor)
+            per_layer += d * 2 * inner + 3 * inner * inner // max(
+                cfg.num_heads, 1) * cfg.num_heads + inner * d
+        elif kind == "slstm":
+            dh = d // cfg.num_heads
+            up = int(d * cfg.slstm_proj_factor)
+            per_layer += d * 4 * d + cfg.num_heads * dh * 4 * dh \
+                + d * 2 * up + up * d
+    if cfg.is_encoder_decoder:
+        per_layer += 0  # encoder counted separately below
+        enc = cfg.enc_layers * (4 * d * cfg.num_heads * cfg.head_dim
+                                + 3 * d * cfg.d_ff)
+    else:
+        enc = 0
+    return emb + per_layer + enc

@@ -1,0 +1,48 @@
+import os
+
+# keep unit tests on the single real device; only dryrun subprocesses
+# force 512 host devices (see src/repro/launch/dryrun.py)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np           # noqa: E402
+import pytest                # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def blobs_separable():
+    from repro.data import synthetic
+    return synthetic.blobs(40, 50, 16, gap=1.2, spread=0.15, seed=0)
+
+
+@pytest.fixture(scope="session")
+def blobs_overlapping():
+    from repro.data import synthetic
+    return synthetic.blobs(45, 55, 12, gap=0.4, spread=0.5, seed=1)
+
+
+@pytest.fixture(scope="session")
+def qp_oracle():
+    """Exact-ish RC-Hull solver via scipy SLSQP (small instances)."""
+    import scipy.optimize as so
+
+    def solve(xp, xm, nu=1.0):
+        xp = np.asarray(xp, np.float64)
+        xm = np.asarray(xm, np.float64)
+        n1, n2 = len(xp), len(xm)
+
+        def f(z):
+            diff = z[:n1] @ xp - z[n1:] @ xm
+            return 0.5 * diff @ diff
+
+        cons = [{"type": "eq", "fun": lambda z: z[:n1].sum() - 1},
+                {"type": "eq", "fun": lambda z: z[n1:].sum() - 1}]
+        z0 = np.r_[np.ones(n1) / n1, np.ones(n2) / n2]
+        r = so.minimize(f, z0, bounds=[(0, nu)] * (n1 + n2),
+                        constraints=cons, options={"maxiter": 500})
+        return r.fun
+
+    return solve

@@ -1,0 +1,95 @@
+"""Baseline algorithms agree with the QP oracle / each other."""
+
+import numpy as np
+import pytest
+
+from repro.baselines import (dist_gilbert, gilbert, hogwild, mdm, pegasos,
+                             qp_nusvm)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    rng = np.random.default_rng(0)
+    d = 24
+    xp = rng.normal(size=(50, d)).astype(np.float32) * 0.1 + 0.3 / np.sqrt(d)
+    xm = rng.normal(size=(60, d)).astype(np.float32) * 0.1 - 0.3 / np.sqrt(d)
+    return xp, xm
+
+
+def test_gilbert_vs_qp(problem, qp_oracle):
+    xp, xm = problem
+    opt = qp_oracle(xp, xm, nu=1.0)
+    res = gilbert.solve(xp, xm, num_iters=3000)
+    assert res.history[-1][1] <= opt * 1.05 + 1e-8
+    assert res.history[-1][1] >= opt - 1e-6
+
+
+def test_gilbert_weights_track_z(problem):
+    xp, xm = problem
+    res = gilbert.solve(xp, xm, num_iters=200)
+    st = res.state
+    z_from_weights = np.asarray(st.eta) @ xp - np.asarray(st.xi) @ xm
+    np.testing.assert_allclose(z_from_weights, np.asarray(st.z), atol=1e-4)
+    assert abs(np.asarray(st.eta).sum() - 1) < 1e-5
+    assert abs(np.asarray(st.xi).sum() - 1) < 1e-5
+
+
+def test_qp_nusvm_capped(problem, qp_oracle):
+    xp, xm = problem
+    nu = 1.0 / (0.75 * 50)
+    opt = qp_oracle(xp, xm, nu=nu)
+    st, hist = qp_nusvm.solve(xp, xm, nu=nu, num_iters=3000)
+    assert hist[-1][1] <= opt * 1.03 + 1e-8
+    eta = np.asarray(st.eta)
+    assert eta.max() <= nu + 1e-6 and abs(eta.sum() - 1) < 1e-5
+
+
+def test_project_capped_simplex_exact():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(1)
+    y = rng.normal(size=40)
+    nu = 0.08
+    v = np.asarray(qp_nusvm.project_capped_simplex(jnp.asarray(
+        y, jnp.float32), nu))
+    assert abs(v.sum() - 1) < 1e-5
+    assert v.min() >= -1e-7 and v.max() <= nu + 1e-6
+    # KKT: entries strictly inside (0, nu) share a common shift y_i - v_i
+    inner = (v > 1e-6) & (v < nu - 1e-6)
+    if inner.sum() >= 2:
+        shifts = y[inner] - v[inner]
+        assert np.ptp(shifts) < 1e-4
+
+
+def test_mdm_vs_gilbert_min_norm(problem):
+    xp, xm = problem
+    pts = xp - xm.mean(0)
+    _, hist_m = mdm.solve(pts, num_iters=3000)
+    res_g = gilbert.solve(pts, np.zeros((1, pts.shape[1]), np.float32),
+                          num_iters=3000)
+    assert abs(hist_m[-1][1] - res_g.history[-1][1]) < 2e-3
+
+
+def test_pegasos_separates(problem):
+    xp, xm = problem
+    x = np.vstack([xp, xm])
+    y = np.r_[np.ones(len(xp)), -np.ones(len(xm))]
+    st, hist = pegasos.solve(x, y, num_iters=3000, lam=1e-3)
+    assert hist[-1][2] >= 0.95      # training accuracy
+
+
+def test_dist_gilbert_matches_serial(problem):
+    xp, xm = problem
+    res = gilbert.solve(xp, xm, num_iters=500)
+    st, hist, comm = dist_gilbert.solve(xp, xm, k=6, num_iters=500)
+    assert abs(hist[-1][2] - res.history[-1][1]) < 1e-4
+    # O(kd) per iteration (Liu et al.) -- vs Saddle-DSVC's O(k)
+    assert comm.scalars_per_iteration() == 3 * 6 * xp.shape[1]
+
+
+def test_hogwild_learns(problem):
+    xp, xm = problem
+    x = np.vstack([xp, xm])
+    y = np.r_[np.ones(len(xp)), -np.ones(len(xm))]
+    st, hist, comm = hogwild.solve(x, y, k=4, num_iters=2000)
+    assert hist[-1][2] >= 0.9
+    assert comm.scalars_per_iteration() == 2 * 4 * x.shape[1]

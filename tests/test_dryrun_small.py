@@ -1,0 +1,58 @@
+"""Reduced-scale dry-run: the full lower+compile+roofline pipeline on an
+8-host-device mesh (the 512-device production sweep runs via
+src/repro/launch/dryrun.py; its results live in experiments/dryrun)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import dataclasses
+import jax
+from repro.configs import get_config
+from repro.launch import specs as S
+from repro.launch.shapes import InputShape
+from repro.models import sharding as shd
+from repro.utils import roofline as rl
+
+arch = sys.argv[1]
+kind = sys.argv[2]
+cfg = get_config(arch).reduced()
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+shape = InputShape("t", kind, 64, 8)
+with mesh:
+    fn, args = S.build_lowerable(cfg, shape, mesh)
+    lowered = jax.jit(fn).lower(*args)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    roof = rl.analyze(compiled)
+    assert mem.temp_size_in_bytes >= 0
+    assert roof.flops >= 0
+    print("DRYRUN_OK", arch, kind, roof.bottleneck)
+"""
+
+
+@pytest.mark.parametrize("arch,kind", [
+    ("h2o-danube-1.8b", "train"),
+    ("deepseek-v2-lite-16b", "train"),
+    ("xlstm-125m", "train"),
+    ("recurrentgemma-2b", "decode"),
+    ("whisper-medium", "prefill"),
+    ("qwen2-vl-7b", "train"),
+    ("gemma-7b", "decode"),
+])
+def test_small_dryrun(arch, kind):
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", CODE, arch, kind],
+        capture_output=True, text=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        env=env, timeout=600)
+    assert "DRYRUN_OK" in out.stdout, out.stdout[-2000:] + out.stderr[-4000:]

@@ -1,0 +1,71 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs the pure-jnp
+oracles in repro.kernels.ref."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n", [1, 5, 33, 100, 257])
+@pytest.mark.parametrize("d", [8, 64, 256])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwht_kernel_sweep(n, d, dtype):
+    rng = np.random.default_rng(n * d)
+    x = jnp.asarray(rng.normal(size=(n, d)), dtype)
+    got = ops.fwht(x)
+    want = ref.fwht_ref(x.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("n,b", [(17, 1), (256, 1), (1000, 4), (513, 128)])
+def test_momentum_dot_sweep(n, b):
+    rng = np.random.default_rng(n + b)
+    cols = jnp.asarray(rng.normal(size=(n, b)), jnp.float32)
+    ll = jnp.asarray(rng.normal(size=n) - 3, jnp.float32)
+    lp = jnp.asarray(rng.normal(size=n) - 3, jnp.float32)
+    got = ops.momentum_dot(cols, ll, lp, 0.95)
+    want = ref.momentum_dot_ref(cols, jnp.exp(ll), jnp.exp(lp), 0.95)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("n,b", [(17, 1), (512, 1), (1025, 8), (2048, 128)])
+@pytest.mark.parametrize("sign", [1.0, -1.0])
+def test_mwu_update_sweep(n, b, sign):
+    rng = np.random.default_rng(n * 7 + b)
+    cols = jnp.asarray(rng.normal(size=(n, b)), jnp.float32)
+    ll = jnp.asarray(np.log(np.ones(n) / n), jnp.float32)
+    u = jnp.asarray(rng.normal(size=n) * 0.1, jnp.float32)
+    dw = jnp.asarray(rng.normal(size=b) * 0.01, jnp.float32)
+    gamma, tau, d_eff = 1e-3, 40.0, 128.0
+    got_log, got_u = ops.mwu_update(cols, ll, u, dw, sign=sign,
+                                    gamma=gamma, tau=tau, d_eff=d_eff)
+    want_log, want_u = ref.mwu_update_ref(cols, ll, u, dw, sign, gamma,
+                                          tau, d_eff)
+    want_log = want_log - jax.scipy.special.logsumexp(want_log)
+    np.testing.assert_allclose(np.asarray(got_log), np.asarray(want_log),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_u), np.asarray(want_u),
+                               atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 300), st.sampled_from([1, 2, 16]),
+       st.integers(0, 9999))
+def test_mwu_update_property(n, b, seed):
+    """Kernel output is a normalized log-distribution for any input."""
+    rng = np.random.default_rng(seed)
+    cols = jnp.asarray(rng.normal(size=(n, b)), jnp.float32)
+    lam = rng.exponential(size=n)
+    ll = jnp.asarray(np.log(lam / lam.sum()), jnp.float32)
+    u = jnp.asarray(rng.normal(size=n), jnp.float32)
+    dw = jnp.asarray(rng.normal(size=b) * 0.1, jnp.float32)
+    log_new, _ = ops.mwu_update(cols, ll, u, dw, sign=1.0, gamma=1e-2,
+                                tau=10.0, d_eff=float(max(n // 2, 1)))
+    assert abs(float(jnp.exp(log_new).sum()) - 1.0) < 1e-4

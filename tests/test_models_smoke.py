@@ -1,0 +1,85 @@
+"""Deliverable (f): per-architecture smoke tests.  Each assigned arch is
+instantiated as a REDUCED variant of the same family (<=2 periods,
+d_model<=512, <=4 experts) and runs one forward + one train step on CPU,
+asserting output shapes and no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as tf
+from repro.train import optimizer as opt
+from repro.train import steps
+
+ASSIGNED = [
+    "qwen2-vl-7b", "chatglm3-6b", "xlstm-125m", "recurrentgemma-2b",
+    "deepseek-v2-236b", "deepseek-v2-lite-16b", "gemma-7b",
+    "deepseek-67b", "whisper-medium", "h2o-danube-1.8b",
+]
+
+
+def _batch(cfg, key, b=2, s=16):
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, axis=1)}
+    if cfg.vision_embeds:
+        batch["vision_embeds"] = jnp.full((b, s, cfg.d_model), 0.01,
+                                          jnp.float32)
+        batch["vision_mask"] = jnp.zeros((b, s), bool).at[:, :4].set(True)
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None, None], (3, b, s))
+    if cfg.is_encoder_decoder:
+        batch["enc_frames"] = jnp.full((b, cfg.enc_frames, cfg.d_model),
+                                       0.01, jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_smoke(arch):
+    cfg = get_config(arch).reduced()
+    params = tf.init_lm(jax.random.key(0), cfg)
+    batch = _batch(cfg, jax.random.key(1))
+    kw = {k: v for k, v in batch.items() if k not in ("tokens", "targets")}
+    logits, _, aux = tf.forward(params, cfg, batch["tokens"], **kw)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+    assert jnp.isfinite(aux)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch).reduced()
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=2)
+    state = steps.init_train_state(jax.random.key(0), cfg, ocfg)
+    ts = jax.jit(steps.make_train_step(cfg, ocfg))
+    batch = _batch(cfg, jax.random.key(2))
+    state, metrics = ts(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # a second step must also be finite (optimizer state valid)
+    state, metrics = ts(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v2-lite-16b", "xlstm-125m",
+                                  "recurrentgemma-2b", "gemma-7b-swa"])
+def test_reduced_bounds(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.d_model <= 512
+    assert cfg.num_layers <= 4          # <= 2 periods
+    if cfg.moe_num_experts:
+        assert cfg.moe_num_experts <= 4
+
+
+def test_unrolled_matches_scanned():
+    """cfg.scan_layers=False (roofline mode) is numerically identical."""
+    import dataclasses
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    params = tf.init_lm(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0,
+                              cfg.vocab_size)
+    a, _, _ = tf.forward(params, cfg, toks)
+    cfg2 = dataclasses.replace(cfg, scan_layers=False)
+    b, _, _ = tf.forward(params, cfg2, toks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

@@ -1,0 +1,68 @@
+"""Pre-processing (Algorithm 1): FWHT + scaling properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import preprocess as pp
+
+
+def test_fwht_matches_hadamard_matrix():
+    d = 16
+    h = np.array([[1.0]])
+    while h.shape[0] < d:
+        h = np.block([[h, h], [h, -h]])
+    h /= np.sqrt(d)
+    x = np.random.default_rng(0).normal(size=(5, d)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(pp.fwht(jnp.asarray(x))),
+                               x @ h.T, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from([2, 4, 8, 16, 64, 256]), st.integers(1, 20),
+       st.integers(0, 9999))
+def test_fwht_self_inverse(d, n, seed):
+    """Normalized WHT is an involution (orthonormal + symmetric)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(pp.fwht(pp.fwht(x))),
+                               np.asarray(x), atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from([4, 16, 128]), st.integers(2, 12),
+       st.integers(0, 9999))
+def test_fwht_preserves_norms(d, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(pp.fwht(x)), axis=1),
+        np.linalg.norm(np.asarray(x), axis=1), rtol=1e-4)
+
+
+def test_preprocess_unit_ball_and_distance_preserved():
+    rng = np.random.default_rng(1)
+    xp = rng.normal(size=(20, 10)).astype(np.float32) * 3
+    xm = rng.normal(size=(30, 10)).astype(np.float32) * 3 - 1
+    pre = pp.preprocess(xp, xm, jax.random.key(0))
+    norms = np.linalg.norm(np.asarray(pre.xp), axis=1)
+    assert norms.max() <= 1.0 + 1e-5
+    # orthonormal transform: pairwise distances scale uniformly
+    d_orig = np.linalg.norm(xp[0] - xm[0])
+    d_tr = np.linalg.norm(np.asarray(pre.xp[0] - pre.xm[0]))
+    assert abs(d_tr - d_orig * float(pre.scale)) < 1e-4
+
+
+def test_recover_direction_roundtrip():
+    """w . (WD scale x) == recover_direction(w) . x for all x."""
+    rng = np.random.default_rng(2)
+    d = 12                      # not a power of two (padding exercised)
+    xp = rng.normal(size=(8, d)).astype(np.float32)
+    xm = rng.normal(size=(9, d)).astype(np.float32)
+    pre = pp.preprocess(xp, xm, jax.random.key(3))
+    w_t = jnp.asarray(rng.normal(size=pre.xp.shape[1]), jnp.float32)
+    w_orig = np.asarray(pp.recover_direction(w_t, pre))
+    lhs = np.asarray(pre.xp) @ np.asarray(w_t)      # transformed space
+    rhs = xp @ w_orig                               # original space
+    np.testing.assert_allclose(lhs, rhs, atol=1e-4)

@@ -1,0 +1,111 @@
+"""Unit + property tests for the paper's projection methods (Lemma 10/11)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import projections as proj
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand_simplex(rng, n):
+    v = rng.exponential(size=n)
+    return v / v.sum()
+
+
+# ------------------------------------------------------- Rule 2 == Rule 3
+@pytest.mark.parametrize("n,nu_scale", [(8, 2.0), (32, 1.5), (100, 5.0),
+                                        (257, 1.2)])
+def test_rule2_equals_rule3(n, nu_scale):
+    rng = np.random.default_rng(n)
+    eta = _rand_simplex(rng, n)
+    nu = nu_scale / n
+    p2 = np.asarray(proj.capped_simplex_project_sorted(
+        jnp.asarray(eta, jnp.float32), nu))
+    p3 = np.asarray(proj.capped_simplex_project_loop(
+        jnp.asarray(eta, jnp.float32), nu))
+    np.testing.assert_allclose(p2, p3, atol=2e-5)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(4, 120), st.floats(1.1, 8.0), st.integers(0, 10_000))
+def test_capped_projection_properties(n, nu_scale, seed):
+    """Output lies in the capped simplex; no-violation input is fixed."""
+    rng = np.random.default_rng(seed)
+    eta = _rand_simplex(rng, n)
+    nu = nu_scale / n
+    out = np.asarray(proj.capped_simplex_project_sorted(
+        jnp.asarray(eta, jnp.float32), nu))
+    assert abs(out.sum() - 1.0) < 1e-4
+    assert out.max() <= nu + 1e-5
+    assert out.min() >= -1e-7
+    if eta.max() <= nu:                     # already feasible -> identity
+        np.testing.assert_allclose(out, eta, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(4, 60), st.integers(0, 10_000))
+def test_projection_idempotent(n, seed):
+    rng = np.random.default_rng(seed)
+    eta = _rand_simplex(rng, n)
+    nu = 2.0 / n
+    once = proj.capped_simplex_project_sorted(jnp.asarray(eta, jnp.float32),
+                                              nu)
+    twice = proj.capped_simplex_project_sorted(once, nu)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice),
+                               atol=2e-5)
+
+
+def test_projection_preserves_order():
+    """The paper's projection is monotone (it clamps the top block and
+    scales the rest by a common factor)."""
+    rng = np.random.default_rng(3)
+    eta = _rand_simplex(rng, 50)
+    nu = 1.5 / 50
+    out = np.asarray(proj.capped_simplex_project_sorted(
+        jnp.asarray(eta, jnp.float32), nu))
+    order_in = np.argsort(eta)
+    sorted_out = out[order_in]
+    assert np.all(np.diff(sorted_out) >= -1e-6)
+
+
+# ------------------------------------------------ entropy prox vs argmin
+def test_entropy_prox_is_argmin():
+    """Lemma 10: the closed form solves the prox problem (check by
+    comparing against a dense numeric minimization over the simplex)."""
+    import scipy.optimize as so
+    rng = np.random.default_rng(0)
+    n, d, gamma, tau = 12, 16.0, 0.05, 3.0
+    lam = _rand_simplex(rng, n)
+    v = rng.normal(size=n)
+
+    closed = np.exp(np.asarray(proj.entropy_prox(
+        jnp.asarray(np.log(lam), jnp.float32), jnp.asarray(v, jnp.float32),
+        gamma, tau, d)))
+
+    def objective(u):
+        u = np.maximum(u, 1e-12)
+        h = np.sum(u * np.log(u))
+        h_lam = np.sum(lam * np.log(lam))
+        bregman = np.sum(u * np.log(u / lam)) - (u.sum() - lam.sum())
+        return (np.dot(v, u) / d + gamma / d * h + bregman / tau)
+
+    cons = [{"type": "eq", "fun": lambda u: u.sum() - 1}]
+    r = so.minimize(objective, lam, bounds=[(1e-9, 1)] * n,
+                    constraints=cons, options={"maxiter": 300})
+    np.testing.assert_allclose(closed, r.x, atol=1e-3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(3, 200), st.integers(0, 10_000))
+def test_entropy_prox_normalized(n, seed):
+    rng = np.random.default_rng(seed)
+    lam = _rand_simplex(rng, n)
+    v = rng.normal(size=n) * 3
+    out = proj.entropy_prox(jnp.asarray(np.log(lam), jnp.float32),
+                            jnp.asarray(v, jnp.float32), 0.01, 10.0, 64.0)
+    total = float(jnp.exp(out).sum())
+    assert abs(total - 1.0) < 1e-4

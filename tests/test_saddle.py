@@ -1,0 +1,95 @@
+"""Saddle-SVC: convergence to the C-Hull / RC-Hull optimum, parameter
+formulas (Algorithm 1 line 4), kernel-backend parity."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import preprocess as pp
+from repro.core import saddle
+from repro.core.svm import split_classes
+
+
+@pytest.fixture(scope="module")
+def small_problem(request):
+    rng = np.random.default_rng(0)
+    d = 16
+    xp = rng.normal(size=(30, d)).astype(np.float32) * 0.25 + 0.4
+    xm = rng.normal(size=(40, d)).astype(np.float32) * 0.25 - 0.4
+    pre = pp.preprocess(xp, xm, jax.random.key(1))
+    return np.asarray(pre.xp), np.asarray(pre.xm)
+
+
+def test_params_formulas():
+    p = saddle.make_params(n=1000, d=64, eps=1e-3, beta=0.1)
+    import math
+    gamma = 1e-3 * 0.1 / (2 * math.log(1000))
+    assert abs(p.gamma - gamma) < 1e-12
+    q = math.sqrt(math.log(1000))
+    assert abs(p.tau - 0.5 / q * math.sqrt(64 / gamma)) < 1e-9
+    assert abs(p.sigma - 0.5 / q * math.sqrt(64 * gamma)) < 1e-9
+    assert abs(p.theta - (1 - 1 / (64 + q * math.sqrt(64 / gamma)))) < 1e-12
+
+
+def test_hm_converges_to_qp(small_problem, qp_oracle):
+    xp, xm = small_problem
+    opt = qp_oracle(xp, xm, nu=1.0)
+    res = saddle.solve(xp, xm, eps=1e-3, beta=0.1, num_iters=6000)
+    obj = res.history[-1][1]
+    assert obj >= opt - 1e-6                   # primal feasible
+    assert obj <= opt * 1.10 + 1e-6            # within 10%
+
+
+def test_nu_converges_to_qp(small_problem, qp_oracle):
+    xp, xm = small_problem
+    nu = 1.0 / (0.8 * 30)
+    opt = qp_oracle(xp, xm, nu=nu)
+    res = saddle.solve(xp, xm, eps=1e-3, beta=0.1, nu=nu, num_iters=6000)
+    obj = res.history[-1][1]
+    assert obj >= opt - 1e-6
+    assert obj <= opt * 1.15 + 1e-5
+
+
+def test_nu_infeasible_raises(small_problem):
+    xp, xm = small_problem
+    with pytest.raises(ValueError):
+        saddle.solve(xp, xm, nu=1.0 / (2 * len(xp)))
+
+
+def test_dual_iterates_feasible(small_problem):
+    xp, xm = small_problem
+    nu = 1.0 / (0.7 * 30)
+    res = saddle.solve(xp, xm, nu=nu, num_iters=300)
+    eta = np.exp(np.asarray(res.state.log_eta))
+    xi = np.exp(np.asarray(res.state.log_xi))
+    assert abs(eta.sum() - 1) < 1e-4 and abs(xi.sum() - 1) < 1e-4
+    assert eta.max() <= nu + 1e-5 and xi.max() <= nu + 1e-5
+
+
+def test_kernel_backend_parity(small_problem):
+    xp, xm = small_problem
+    a = saddle.solve(xp, xm, num_iters=80)
+    b = saddle.solve(xp, xm, num_iters=80, use_kernels=True)
+    np.testing.assert_allclose(np.asarray(a.state.w),
+                               np.asarray(b.state.w), atol=1e-5)
+
+
+def test_block_mode_converges(small_problem, qp_oracle):
+    """Beyond-paper block-coordinate mode reaches the same optimum."""
+    xp, xm = small_problem
+    opt = qp_oracle(xp, xm, nu=1.0)
+    res = saddle.solve(xp, xm, eps=1e-3, beta=0.1, block_size=4,
+                       num_iters=6000)
+    assert res.history[-1][1] <= opt * 1.10 + 1e-6
+
+
+def test_saddle_value_equals_polytope_distance(small_problem):
+    """Lemma 2: max_w min phi == 0.5 ||closest difference point||^2.
+    At the optimum, g(w) == OPT == objective."""
+    xp, xm = small_problem
+    res = saddle.solve(xp, xm, eps=1e-3, beta=0.05, num_iters=8000)
+    obj = res.history[-1][1]
+    gap = float(saddle.saddle_gap(res.state, xp, xm))
+    # g(w) <= OPT <= obj, both within a few percent at convergence
+    assert gap <= obj + 1e-5
+    assert gap >= obj * 0.85 - 1e-4

@@ -1,0 +1,79 @@
+"""Sharding rules: divisibility guards, param spec table, HLO collective
+parser."""
+
+import numpy as np
+
+from repro.utils import hlo_analysis as hlo
+
+
+def test_collective_parser():
+    text = """
+  %ag = bf16[16,1024] all-gather(%x), replica_groups={}
+  %ar.1 = f32[256] all-reduce(%y), to_apply=%sum
+  %rs = bf16[8,128] reduce-scatter(%z), dimensions={0}
+  %a2a = f32[4,64] all-to-all(%w)
+  %cp = bf16[32] collective-permute(%v)
+  %dot = f32[128,128] dot(%a, %b)
+"""
+    stats = hlo.collective_stats(text)
+    assert stats.count_by_op == {"all-gather": 1, "all-reduce": 1,
+                                 "reduce-scatter": 1, "all-to-all": 1,
+                                 "collective-permute": 1}
+    assert stats.bytes_by_op["all-gather"] == 16 * 1024 * 2
+    assert stats.bytes_by_op["all-reduce"] == 256 * 4
+    assert stats.total_bytes == (16 * 1024 * 2 + 256 * 4 + 8 * 128 * 2
+                                 + 4 * 64 * 4 + 32 * 2)
+
+
+def test_collective_parser_tuple_shapes():
+    text = "%ar = (f32[8], f32[8]) all-reduce(%a, %b), to_apply=%sum"
+    stats = hlo.collective_stats(text)
+    assert stats.bytes_by_op["all-reduce"] == 64
+
+
+def test_spec_divisibility_guard():
+    """Axes that do not divide a dim are dropped (e.g. 28 heads on a
+    16-way model axis)."""
+    import subprocess
+    import sys
+    import os
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax
+from repro.models import sharding as shd
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+shd.set_mesh_axes(mesh)
+# heads=28 not divisible by model=2? 28 % 2 == 0 -> sharded
+s = shd.spec_for(["batch", None, "heads", None], (8, 1, 28, 64))
+assert s[2] == "model", s
+# heads=7 NOT divisible by 2 -> dropped
+s = shd.spec_for(["batch", None, "heads", None], (8, 1, 7, 64))
+assert s[2] is None, s
+# batch=2 not divisible by data=4 -> dropped
+s = shd.spec_for(["batch", None], (2, 16))
+assert s[0] is None, s
+# no double-use of a physical axis
+s = shd.spec_for(["heads", "mlp"], (4, 4))
+assert not (s[0] == "model" and s[1] == "model"), s
+print("SPEC_OK")
+"""
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         env=env, timeout=120)
+    assert "SPEC_OK" in out.stdout, out.stdout + out.stderr
+
+
+def test_no_mesh_is_noop():
+    from repro.models import sharding as shd
+    import jax.numpy as jnp
+    shd.set_mesh_axes(None)
+    x = jnp.ones((4, 4))
+    y = shd.shard(x, "batch", "mlp")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

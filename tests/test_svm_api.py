@@ -1,0 +1,50 @@
+"""High-level SaddleSVC / SaddleNuSVC behaviour (fit/predict/b offset)."""
+
+import numpy as np
+
+from repro.core.svm import SaddleNuSVC, SaddleSVC
+
+
+def test_hard_margin_separable(blobs_separable):
+    ds = blobs_separable
+    clf = SaddleSVC(eps=1e-3, beta=0.1, num_iters=8000).fit(ds.x, ds.y)
+    assert clf.score(ds.x, ds.y) >= 0.99
+    assert clf.margin_ > 0
+
+
+def test_offset_bisects_closest_points(blobs_separable):
+    """Footnote 2: b = w.(A eta + B xi)/2 -- the decision boundary sits
+    midway between the two closest (weighted) hull points."""
+    ds = blobs_separable
+    clf = SaddleSVC(eps=1e-3, beta=0.1, num_iters=8000).fit(ds.x, ds.y)
+    xp = ds.x[ds.y > 0]
+    xm = ds.x[ds.y < 0]
+    p_near = clf.eta_ @ xp
+    q_near = clf.xi_ @ xm
+    fp = p_near @ clf.w_ - clf.b_
+    fm = q_near @ clf.w_ - clf.b_
+    np.testing.assert_allclose(fp, -fm, rtol=0.05, atol=1e-4)
+    assert fp > 0 > fm
+
+
+def test_nu_svm_overlapping(blobs_overlapping):
+    ds = blobs_overlapping
+    clf = SaddleNuSVC(alpha=0.85, eps=1e-3, beta=0.1,
+                      num_iters=6000).fit(ds.x, ds.y)
+    # gap=0.4/spread=0.5 blobs overlap heavily; Bayes accuracy ~0.78
+    assert clf.score(ds.x, ds.y) >= 0.7
+    nu = 1.0 / (0.85 * min((ds.y > 0).sum(), (ds.y < 0).sum()))
+    assert clf.eta_.max() <= nu + 1e-5
+
+
+def test_generalization(blobs_separable):
+    tr, te = blobs_separable.split(test_frac=0.25, seed=3)
+    clf = SaddleSVC(eps=1e-3, beta=0.1, num_iters=6000).fit(tr.x, tr.y)
+    assert clf.score(te.x, te.y) >= 0.95
+
+
+def test_explicit_nu():
+    from repro.data import synthetic
+    ds = synthetic.blobs(30, 30, 8, gap=0.5, spread=0.4, seed=7)
+    clf = SaddleNuSVC(nu=0.1, num_iters=3000).fit(ds.x, ds.y)
+    assert clf.eta_.max() <= 0.1 + 1e-5
