@@ -4,11 +4,11 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fig1_nusvm_convergence, fig2_size_scaling,
-                        fig3_dist_hard_margin, fig4_dist_nusvm,
-                        kernels_bench, roofline, table1_hard_margin,
-                        table3_nu_sweep, table4_density,
-                        theory_iters_comm)
+from benchmarks import (engine_bench, fig1_nusvm_convergence,
+                        fig2_size_scaling, fig3_dist_hard_margin,
+                        fig4_dist_nusvm, kernels_bench, roofline,
+                        table1_hard_margin, table3_nu_sweep,
+                        table4_density, theory_iters_comm)
 from benchmarks.common import emit, header
 
 SUITES = [
@@ -21,6 +21,7 @@ SUITES = [
     ("table4", table4_density),
     ("theory", theory_iters_comm),
     ("kernels", kernels_bench),
+    ("engine", engine_bench),
     ("roofline", roofline),
 ]
 

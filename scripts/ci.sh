@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Two-tier test driver.
+#
+#   scripts/ci.sh fast   -- SVM/solver tier (<3 min): everything not
+#                           marked `slow` (see pytest.ini).  Run on
+#                           every change.
+#   scripts/ci.sh full   -- the whole suite including the LM-side
+#                           model/system tests (>10 min on CPU).
+#                           Nightly-style.
+#
+# No PYTHONPATH gymnastics needed: tests/conftest.py inserts src/ into
+# sys.path, so a plain `python -m pytest` works from the repo root.
+# Extra args are forwarded to pytest (e.g. scripts/ci.sh fast -k engine).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+tier="${1:-fast}"
+shift || true
+
+case "$tier" in
+  fast) exec python -m pytest -q -m "not slow" "$@" ;;
+  full) exec python -m pytest -q "$@" ;;
+  *)    echo "usage: scripts/ci.sh [fast|full] [pytest args...]" >&2
+        exit 2 ;;
+esac

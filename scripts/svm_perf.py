@@ -24,6 +24,9 @@ from repro.data import synthetic
 def iters_to_target(XP, XM, opt, *, block_size, scaling="lane",
                     tol=1.05, max_iters=40000, record=500):
     import jax.numpy as jnp
+
+    from repro.core import engine
+
     params = saddle.make_params(XP.shape[0] + XM.shape[0], XP.shape[1],
                                 1e-3, 0.1, block_size=block_size,
                                 block_scaling=scaling)
@@ -36,9 +39,12 @@ def iters_to_target(XP, XM, opt, *, block_size, scaling="lane",
     obj = np.inf
     while done < max_iters:
         key, sub = jax.random.split(key)
-        st = saddle.run_chunk(st, sub, xp_j, xm_j, params, record)
+        # fused engine chunk: donated state, objective computed on device
+        # (the convergence check is the only per-chunk host sync)
+        st, obj_dev = engine.run_chunk(st, sub, xp_j, xm_j, record,
+                                       params=params, chunk_steps=record)
         done += record
-        obj = float(saddle.objective(st.log_eta, st.log_xi, xp_j, xm_j))
+        obj = float(obj_dev)
         if obj <= opt * tol + 1e-9:
             break
     wall = time.perf_counter() - t0

@@ -15,7 +15,9 @@ O(1) scalars over the client axis, so the whole protocol is a handful of
 scalar ``lax.psum``s per iteration -- the TPU-native realization of the
 O(k) communication bound (Theorem 8).
 
-The SAME step function runs in two modes:
+The step itself is :func:`repro.core.engine.step` with
+``axis_name=CLIENT_AXIS`` -- the SAME code the serial solver runs (the
+serial path is the k=1 degenerate client).  It executes in two modes:
   * ``shard_map`` over a real mesh axis (multi-device / dry-run), or
   * ``jax.vmap(..., axis_name=CLIENT_AXIS)`` over a stacked (k, n/k, ...)
     state -- a bit-exact single-device simulation of k clients (psum is
@@ -36,11 +38,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine
 from repro.core import saddle
+from repro.core.engine import CLIENT_AXIS, NEG_INF
 from repro.core.saddle import SaddleParams
-
-CLIENT_AXIS = "clients"
-NEG_INF = -1e30     # log-weight of padding points (exp() == 0 exactly)
 
 
 class ShardedState(NamedTuple):
@@ -75,92 +76,13 @@ class CommModel(NamedTuple):
         return self.scalars_per_iteration() * iters
 
 
-def _dist_entropy_prox(log_lam, v, gamma, tau, d_eff):
-    """Entropy prox with a DISTRIBUTED normalizer (round 2-3: local sums
-    psum'd across clients -- log-space for stability)."""
-    c = 1.0 / (gamma + d_eff / tau)
-    log_new = c * ((d_eff / tau) * log_lam - v)
-    # local logsumexp -> global via psum of exp-shifted sums
-    local_max = jnp.max(log_new)
-    global_max = jax.lax.pmax(local_max, CLIENT_AXIS)
-    local_sum = jnp.sum(jnp.exp(log_new - global_max))
-    global_sum = jax.lax.psum(local_sum, CLIENT_AXIS)
-    return log_new - (global_max + jnp.log(global_sum))
-
-
-def _dist_capped_project(log_eta, nu, max_rounds):
-    """Round 4 of Algorithm 4: the distributed Rule-3 projection.  All
-    clients iterate on psum'd (varsigma, Omega) until varsigma == 0."""
-    def cond(state):
-        eta, it = state
-        varsig = jax.lax.psum(
-            jnp.sum(jnp.where(eta > nu, eta - nu, 0.0)), CLIENT_AXIS)
-        return (varsig > 1e-12) & (it < max_rounds)
-
-    def body(state):
-        eta, it = state
-        varsig = jax.lax.psum(
-            jnp.sum(jnp.where(eta > nu, eta - nu, 0.0)), CLIENT_AXIS)
-        omega = jax.lax.psum(
-            jnp.sum(jnp.where(eta < nu, eta, 0.0)), CLIENT_AXIS)
-        eta = jnp.where(eta >= nu, nu,
-                        eta * (1.0 + varsig / jnp.maximum(omega, 1e-30)))
-        return eta, it + 1
-
-    eta = jnp.exp(log_eta)
-    eta, _ = jax.lax.while_loop(cond, body, (eta, jnp.array(0, jnp.int32)))
-    return jnp.where(eta > 0, jnp.log(jnp.maximum(eta, 1e-38)), NEG_INF)
-
-
 def dsvc_step(state: ShardedState, key: jax.Array, xp: jax.Array,
               xm: jax.Array, p: SaddleParams) -> ShardedState:
-    """One Algorithm-4 iteration from a single client's viewpoint.
-    ``xp``/``xm`` are the client's local (m1, d)/(m2, d) slices.  The key
-    is identical across clients (server broadcasts i*)."""
-    d, b = p.d, p.block_size
-    d_eff = d / b
-    idx = jax.random.randint(key, (b,), 0, d)
-    cols_p = xp[:, idx]
-    cols_m = xm[:, idx]
-
-    eta = jnp.exp(state.log_eta)
-    eta_prev = jnp.exp(state.log_eta_prev)
-    xi = jnp.exp(state.log_xi)
-    xi_prev = jnp.exp(state.log_xi_prev)
-
-    # Round 1: partial dot products, all-reduced (C.delta -> S.delta).
-    mom_eta = eta + p.theta * (eta - eta_prev)
-    mom_xi = xi + p.theta * (xi - xi_prev)
-    delta_p = jax.lax.psum(cols_p.T @ mom_eta, CLIENT_AXIS)
-    delta_m = jax.lax.psum(cols_m.T @ mom_xi, CLIENT_AXIS)
-
-    # Round 2: every client performs the identical w update.
-    w_old = state.w[idx]
-    w_new = (w_old + p.sigma * (delta_p - delta_m)) / (p.sigma + 1.0)
-    dw = w_new - w_old
-
-    dv_p = cols_p @ dw
-    dv_m = cols_m @ dw
-    v_p = state.u_p + d_eff * dv_p
-    v_m = state.u_m + d_eff * dv_m
-
-    # Rounds 2-3: MWU update with distributed normalizer.
-    log_eta_new = _dist_entropy_prox(state.log_eta, v_p, p.gamma, p.tau, d_eff)
-    log_xi_new = _dist_entropy_prox(state.log_xi, -v_m, p.gamma, p.tau, d_eff)
-
-    # Round 4 (nu-Saddle): distributed capped-simplex projection.
-    if p.nu > 0.0:
-        max_rounds = int(1.0 / p.nu) + 2
-        log_eta_new = _dist_capped_project(log_eta_new, p.nu, max_rounds)
-        log_xi_new = _dist_capped_project(log_xi_new, p.nu, max_rounds)
-
-    return ShardedState(
-        w=state.w.at[idx].set(w_new),
-        log_eta=log_eta_new, log_eta_prev=state.log_eta,
-        log_xi=log_xi_new, log_xi_prev=state.log_xi,
-        u_p=state.u_p + dv_p, u_m=state.u_m + dv_m,
-        t=state.t + 1,
-    )
+    """One Algorithm-4 iteration from a single client's viewpoint
+    (engine step under the client axis).  ``xp``/``xm`` are the client's
+    local (m1, d)/(m2, d) slices; the key is identical across clients
+    (server broadcasts i*)."""
+    return engine.step(state, key, xp, xm, p, axis_name=CLIENT_AXIS)
 
 
 def shard_points(x: np.ndarray, k: int):
@@ -176,6 +98,20 @@ def shard_points(x: np.ndarray, k: int):
     return xpad[order].reshape(k, m, d), mask[order].reshape(k, m)
 
 
+def gather_duals(state: ShardedState, n1: int, n2: int, k: int):
+    """Undo the round-robin sharding of :func:`shard_points`: shard c,
+    slot j holds original point index j*k + c, so stacking slot-major
+    (transpose then flatten) restores the original order.  Returns
+    (eta, xi) of length n1, n2."""
+    def unshard(log_v, n):
+        if log_v.shape[0] != k:
+            raise ValueError(
+                f"state has {log_v.shape[0]} client shards, expected k={k}")
+        flat = np.asarray(log_v).T.reshape(-1)   # flat[j*k + c] = v[c, j]
+        return np.exp(flat[:n])
+    return unshard(state.log_eta, n1), unshard(state.log_xi, n2)
+
+
 def init_sharded_state(n1: int, n2: int, d: int, mask_p: np.ndarray,
                        mask_m: np.ndarray) -> ShardedState:
     """Stacked (k, ...) client states; padding points get NEG_INF."""
@@ -184,56 +120,62 @@ def init_sharded_state(n1: int, n2: int, d: int, mask_p: np.ndarray,
     log_eta = jnp.where(jnp.asarray(mask_p), -math.log(n1), NEG_INF)
     log_xi = jnp.where(jnp.asarray(mask_m), -math.log(n2), NEG_INF)
     zeros = jnp.zeros((k, d), jnp.float32)
+    log_eta = log_eta.astype(jnp.float32)
+    log_xi = log_xi.astype(jnp.float32)
+    # prev copies are distinct buffers (the state is donated downstream)
     return ShardedState(
         w=zeros,
-        log_eta=log_eta.astype(jnp.float32),
-        log_eta_prev=log_eta.astype(jnp.float32),
-        log_xi=log_xi.astype(jnp.float32),
-        log_xi_prev=log_xi.astype(jnp.float32),
+        log_eta=log_eta, log_eta_prev=jnp.copy(log_eta),
+        log_xi=log_xi, log_xi_prev=jnp.copy(log_xi),
         u_p=jnp.zeros((k, m1), jnp.float32),
         u_m=jnp.zeros((k, m2), jnp.float32),
         t=jnp.zeros((k,), jnp.int32),
     )
 
 
-@functools.partial(jax.jit, static_argnames=("params", "num_steps"))
+@functools.partial(jax.jit,
+                   static_argnames=("params", "chunk_steps", "backend"),
+                   donate_argnums=(0,))
 def run_chunk_sim(state: ShardedState, key: jax.Array, xp: jax.Array,
-                  xm: jax.Array, params: SaddleParams,
-                  num_steps: int) -> ShardedState:
-    """Single-device simulation: vmap over the stacked client axis."""
+                  xm: jax.Array, num_steps, *, params: SaddleParams,
+                  chunk_steps: int, backend: str = "jnp"):
+    """Single-device simulation: vmap the engine chunk over the stacked
+    client axis (dynamic trip count + donated state, like the serial
+    path).  Returns (state, per-client objective (k,))."""
 
-    def one_client_scan(st, xp_c, xm_c, keys):
-        def body(s, kk):
-            return dsvc_step(s, kk, xp_c, xm_c, params), None
-        out, _ = jax.lax.scan(body, st, keys)
-        return out
+    def one_client(st, xp_c, xm_c):
+        return engine.chunk_body(st, key, xp_c, xm_c, params, num_steps,
+                                 chunk_steps=chunk_steps,
+                                 axis_name=CLIENT_AXIS, backend=backend)
 
-    keys = jax.random.split(key, num_steps)   # identical for all clients
-    return jax.vmap(one_client_scan, in_axes=(0, 0, 0, None),
-                    axis_name=CLIENT_AXIS)(state, xp, xm, keys)
+    return jax.vmap(one_client, in_axes=(0, 0, 0),
+                    axis_name=CLIENT_AXIS)(state, xp, xm)
 
 
-def make_sharded_runner(mesh: jax.sharding.Mesh, axis: str = CLIENT_AXIS):
+def make_sharded_runner(mesh: jax.sharding.Mesh, axis: str = CLIENT_AXIS,
+                        backend: str = "jnp"):
     """shard_map runner for a real device mesh: the production path used
     by the multi-pod dry-run (clients = the mesh 'data' axis)."""
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
-    def run(state, key, xp, xm, params, num_steps):
-        def client_fn(st, xp_c, xm_c):
+    @functools.partial(jax.jit,
+                       static_argnames=("params", "chunk_steps"),
+                       donate_argnums=(0,))
+    def run(state, key, xp, xm, num_steps, *, params, chunk_steps):
+        def client_fn(st, xp_c, xm_c, key_r, ns_r):
             st = jax.tree.map(lambda a: a[0], st)        # drop shard dim
             xp_c, xm_c = xp_c[0], xm_c[0]
-            keys = jax.random.split(key, num_steps)
-            def body(s, kk):
-                return dsvc_step(s, kk, xp_c, xm_c, params), None
-            out, _ = jax.lax.scan(body, st, keys)
-            return jax.tree.map(lambda a: a[None], out)
+            st, obj = engine.chunk_body(
+                st, key_r, xp_c, xm_c, params, ns_r,
+                chunk_steps=chunk_steps, axis_name=axis, backend=backend)
+            return jax.tree.map(lambda a: a[None], st), obj[None]
 
         spec = P(axis)
         fn = shard_map(client_fn, mesh=mesh,
-                       in_specs=(spec, spec, spec), out_specs=spec,
-                       check_rep=False)
-        return fn(state, xp, xm)
+                       in_specs=(spec, spec, spec, P(), P()),
+                       out_specs=(spec, spec), check_rep=False)
+        return fn(state, xp, xm, key, jnp.asarray(num_steps, jnp.int32))
 
     return run
 
@@ -249,8 +191,8 @@ def solve_distributed(xp: np.ndarray, xm: np.ndarray, *, k: int = 20,
                       eps: float = 1e-3, beta: float = 0.1, nu: float = 0.0,
                       num_iters: int | None = None, block_size: int = 1,
                       seed: int = 0, record_every: int | None = None,
-                      mesh: jax.sharding.Mesh | None = None
-                      ) -> DistSolveResult:
+                      mesh: jax.sharding.Mesh | None = None,
+                      use_kernels: bool = False) -> DistSolveResult:
     """Run Saddle-DSVC with k clients (simulation unless a mesh is given).
 
     Data must already be preprocessed (Algorithm 3 runs WD per client with
@@ -270,46 +212,25 @@ def solve_distributed(xp: np.ndarray, xm: np.ndarray, *, k: int = 20,
     state = init_sharded_state(n1, n2, d, mask_p, mask_m)
     xp_sh = jnp.asarray(xp_sh)
     xm_sh = jnp.asarray(xm_sh)
+    chunk = min(record_every or num_iters, num_iters)
+    backend = "pallas" if use_kernels else "jnp"
 
     if mesh is not None:
-        runner = make_sharded_runner(mesh)
-        run = lambda st, kk, ns: runner(st, kk, xp_sh, xm_sh, params, ns)
+        runner = make_sharded_runner(mesh, backend=backend)
+        run = lambda st, kk, ns: runner(st, kk, xp_sh, xm_sh, ns,
+                                        params=params, chunk_steps=chunk)
     else:
-        run = lambda st, kk, ns: run_chunk_sim(st, kk, xp_sh, xm_sh,
-                                               params, ns)
+        run = lambda st, kk, ns: run_chunk_sim(st, kk, xp_sh, xm_sh, ns,
+                                               params=params,
+                                               chunk_steps=chunk,
+                                               backend=backend)
 
     # expected projection rounds per iteration (<= 1/nu; typically 1-2)
     nu_rounds = 2.0 if nu > 0 else 0.0
     comm = CommModel(k=k, nu_rounds_per_iter=nu_rounds)
 
-    key = jax.random.key(seed)
-    chunk = record_every or num_iters
-    history = []
-    done = 0
-    while done < num_iters:
-        key, sub = jax.random.split(key)
-        ns = min(chunk, num_iters - done)
-        state = run(state, sub, ns)
-        done += ns
-        obj = float(distributed_objective(state, xp_sh, xm_sh))
-        history.append((done, comm.total(done), obj))
+    state, hist = engine.drive(state, jax.random.key(seed),
+                               num_iters, chunk, run)
+    history = [(done, comm.total(done), obj) for done, obj in hist]
     return DistSolveResult(state=state, history=history, comm=comm,
                            scalars_sent=comm.total(num_iters))
-
-
-def distributed_objective(state: ShardedState, xp_sh, xm_sh) -> jax.Array:
-    """0.5 || A eta - B xi ||^2 from the stacked client state."""
-    eta = jnp.exp(state.log_eta)       # (k, m1)
-    xi = jnp.exp(state.log_xi)
-    diff = jnp.einsum("km,kmd->d", eta, xp_sh) - \
-        jnp.einsum("km,kmd->d", xi, xm_sh)
-    return 0.5 * jnp.sum(diff * diff)
-
-
-def gather_duals(state: ShardedState, n1: int, n2: int, k: int):
-    """Undo the round-robin sharding; returns (eta, xi) of length n1, n2."""
-    def unshard(log_v, n):
-        k_, m = log_v.shape
-        flat = np.asarray(log_v).T.reshape(-1)   # inverse of round robin
-        return np.exp(flat[:n])
-    return unshard(state.log_eta, n1), unshard(state.log_xi, n2)

@@ -1,0 +1,259 @@
+"""Fused solver core shared by every Saddle-SVC execution mode.
+
+The paper's Algorithm 2 (serial) and Algorithm 4 (distributed) are the
+same iteration: the serial solver is the k=1 degenerate client, where
+every all-reduce is the identity.  This module implements that single
+step ONCE, parameterized along two orthogonal axes:
+
+  ``axis_name``   None          -> serial (all psum/pmax collapse away)
+                  "clients"     -> distributed, under ``jax.vmap``
+                                   (bit-exact k-client simulation) or
+                                   ``shard_map`` (real device mesh)
+
+  ``backend``     "jnp"         -> pure jax.numpy step
+                  "pallas"      -> the Pallas kernels in
+                                   ``repro.kernels.ops`` for the two
+                                   O(n) passes over the points
+
+On top of the step sits a fixed-shape chunk driver:
+
+  * ``chunk_body`` pre-splits the per-step keys at a static
+    ``chunk_steps`` shape but runs the step under a ``fori_loop`` with
+    a DYNAMIC trip count, so one executable serves every chunk length
+    and the padded tail of a partial final chunk is never executed --
+    the seed driver re-jitted its scan for each distinct ``num_steps``
+    (e.g. the partial final chunk of a ``record_every``-chunked solve).
+  * ``run_chunk`` (the serial jit wrapper) donates the state buffers
+    (``donate_argnums``) so the solver state is updated in place.
+  * The objective is computed on device at the end of each chunk and
+    returned as a device scalar; drivers accumulate those and do ONE
+    host transfer at the end of the solve instead of a blocking
+    ``float(...)`` sync per chunk.
+
+Coordinate blocks are sampled WITHOUT replacement.  With replacement
+(the seed behavior), a duplicated index made ``w.at[idx].set(w_new)``
+last-write-wins while ``cols @ dw`` double-counted that column in the
+incremental inner products ``u_p``/``u_m``, silently corrupting the
+invariant ``u == X w``.
+"""
+
+from __future__ import annotations
+
+import collections
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import projections
+
+CLIENT_AXIS = "clients"
+NEG_INF = -1e30     # log-weight of padding points (exp() == 0 exactly)
+
+# Incremented at TRACE time inside chunk_body, keyed by the static
+# configuration -- i.e. it counts XLA compilations, not calls.  Tests
+# use this to assert that chunked solves with a partial final chunk
+# compile the chunk exactly once.
+trace_counts: collections.Counter = collections.Counter()
+
+
+def sample_block(key: jax.Array, d: int, b: int) -> jax.Array:
+    """b distinct coordinates, uniform without replacement (b=1 keeps
+    the cheap single-draw path; the distributions coincide)."""
+    if b == 1:
+        return jax.random.randint(key, (1,), 0, d)
+    return jax.random.permutation(key, d)[:b]
+
+
+def _all_sum(x, axis_name):
+    return x if axis_name is None else jax.lax.psum(x, axis_name)
+
+
+def _all_max(x, axis_name):
+    return x if axis_name is None else jax.lax.pmax(x, axis_name)
+
+
+def _dual_update(cols, log_lam, u, dw, sign, p, axis_name, backend):
+    """Lines 5-6 of Algorithm 2 + incremental u maintenance, normalized
+    with a (possibly distributed) logsumexp.  Returns (log_new, u_new).
+
+    Both backends produce the UNNORMALIZED log weights plus local
+    normalizer partials (m, s) with lse = m + log(s); the partials are
+    then combined across clients (rounds 2-3 of Algorithm 4) or used
+    directly in serial mode.
+    """
+    d_eff = p.d / p.block_size
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        log_new, u_new, m_local, s_local = kops.mwu_update(
+            cols, log_lam, u, dw, sign=sign, gamma=p.gamma, tau=p.tau,
+            d_eff=d_eff, normalize=False)
+    else:
+        dv = cols @ dw
+        v = sign * (u + d_eff * dv)
+        c = 1.0 / (p.gamma + d_eff / p.tau)
+        log_new = c * ((d_eff / p.tau) * log_lam - v)
+        u_new = u + dv
+        m_local = jnp.max(log_new)
+        s_local = jnp.sum(jnp.exp(log_new - m_local))
+    m = _all_max(m_local, axis_name)
+    s = _all_sum(s_local * jnp.exp(m_local - m), axis_name)
+    return log_new - (m + jnp.log(s)), u_new
+
+
+def _capped_project(log_lam, nu, axis_name):
+    """Rule 2 (serial: one sort) or the distributed Rule-3 loop (round 4
+    of Algorithm 4: psum'd (varsigma, Omega) until varsigma == 0)."""
+    if axis_name is None:
+        eta = projections.capped_simplex_project_sorted(
+            jnp.exp(log_lam), nu)
+        return jnp.log(jnp.maximum(eta, 1e-38))
+
+    max_rounds = int(1.0 / nu) + 2
+
+    def cond(state):
+        eta, it = state
+        varsig = jax.lax.psum(
+            jnp.sum(jnp.where(eta > nu, eta - nu, 0.0)), axis_name)
+        return (varsig > 1e-12) & (it < max_rounds)
+
+    def body(state):
+        eta, it = state
+        varsig = jax.lax.psum(
+            jnp.sum(jnp.where(eta > nu, eta - nu, 0.0)), axis_name)
+        omega = jax.lax.psum(
+            jnp.sum(jnp.where(eta < nu, eta, 0.0)), axis_name)
+        eta = jnp.where(eta >= nu, nu,
+                        eta * (1.0 + varsig / jnp.maximum(omega, 1e-30)))
+        return eta, it + 1
+
+    eta = jnp.exp(log_lam)
+    eta, _ = jax.lax.while_loop(cond, body, (eta, jnp.array(0, jnp.int32)))
+    return jnp.where(eta > 0, jnp.log(jnp.maximum(eta, 1e-38)), NEG_INF)
+
+
+def step(state, key: jax.Array, xp: jax.Array, xm: jax.Array, p, *,
+         axis_name: str | None = None, backend: str = "jnp"):
+    """One Algorithm-2/4 iteration from a single client's viewpoint.
+
+    ``state`` is any NamedTuple with the canonical eight fields
+    (SaddleState / ShardedState); the same type is returned.  ``xp`` and
+    ``xm`` are the client's local (m1, d)/(m2, d) slices -- the full
+    matrices in serial mode.  Under an axis, the key is identical across
+    clients (the server broadcasts i*).
+    """
+    d, b = p.d, p.block_size
+    d_eff = d / b
+    idx = sample_block(key, d, b)
+    cols_p = xp[:, idx]                              # (n1, B) rows X_{i*,.}
+    cols_m = xm[:, idx]                              # (n2, B)
+
+    # Lines 2-3 (round 1): momentum-extrapolated dual dot products,
+    # all-reduced over clients.
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        delta_p = kops.momentum_dot(cols_p, state.log_eta,
+                                    state.log_eta_prev, p.theta)
+        delta_m = kops.momentum_dot(cols_m, state.log_xi,
+                                    state.log_xi_prev, p.theta)
+    else:
+        eta = jnp.exp(state.log_eta)
+        eta_prev = jnp.exp(state.log_eta_prev)
+        xi = jnp.exp(state.log_xi)
+        xi_prev = jnp.exp(state.log_xi_prev)
+        delta_p = cols_p.T @ (eta + p.theta * (eta - eta_prev))
+        delta_m = cols_m.T @ (xi + p.theta * (xi - xi_prev))
+    delta_p = _all_sum(delta_p, axis_name)
+    delta_m = _all_sum(delta_m, axis_name)
+
+    # Line 4 (round 2): every client performs the identical w update.
+    w_old = state.w[idx]
+    w_new = (w_old + p.sigma * (delta_p - delta_m)) / (p.sigma + 1.0)
+    dw = w_new - w_old
+
+    # Lines 5-6 (rounds 2-3): MWU dual updates.
+    log_eta_new, u_p_new = _dual_update(
+        cols_p, state.log_eta, state.u_p, dw, 1.0, p, axis_name, backend)
+    log_xi_new, u_m_new = _dual_update(
+        cols_m, state.log_xi, state.u_m, dw, -1.0, p, axis_name, backend)
+
+    # Rule 2 / round 4: nu-Saddle capped-simplex projection.
+    if p.nu > 0.0:
+        log_eta_new = _capped_project(log_eta_new, p.nu, axis_name)
+        log_xi_new = _capped_project(log_xi_new, p.nu, axis_name)
+
+    return type(state)(
+        w=state.w.at[idx].set(w_new),
+        log_eta=log_eta_new, log_eta_prev=state.log_eta,
+        log_xi=log_xi_new, log_xi_prev=state.log_xi,
+        u_p=u_p_new, u_m=u_m_new,
+        t=state.t + 1,
+    )
+
+
+def objective_from_state(state, xp, xm, axis_name=None) -> jax.Array:
+    """C-Hull / RC-Hull objective 0.5 * ||A eta - B xi||^2, all-reduced
+    over clients when run under an axis."""
+    diff = jnp.exp(state.log_eta) @ xp - jnp.exp(state.log_xi) @ xm
+    diff = _all_sum(diff, axis_name)
+    return 0.5 * jnp.sum(diff * diff)
+
+
+def chunk_body(state, key, xp, xm, params, num_steps, *,
+               chunk_steps: int, axis_name: str | None = None,
+               backend: str = "jnp"):
+    """Run ``num_steps`` (dynamic) of at most ``chunk_steps`` (static)
+    iterations and record the objective on device.
+
+    The per-step keys are pre-split at the FIXED shape ``chunk_steps``
+    while the trip count stays dynamic, so one executable serves every
+    chunk length (the seed driver re-jitted its scan per distinct
+    length) and a partial final chunk both reuses the executable AND
+    skips the padded tail entirely (``fori_loop``, not a masked scan).
+    Returns (new_state, objective_scalar)."""
+    trace_counts[(axis_name, backend, chunk_steps)] += 1  # trace-time only
+
+    keys = jax.random.split(key, chunk_steps)
+
+    def body(i, st):
+        return step(st, keys[i], xp, xm, params,
+                    axis_name=axis_name, backend=backend)
+
+    state = jax.lax.fori_loop(0, num_steps, body, state)
+    return state, objective_from_state(state, xp, xm, axis_name)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("params", "chunk_steps", "backend"),
+                   donate_argnums=(0,))
+def run_chunk(state, key, xp, xm, num_steps, *, params, chunk_steps: int,
+              backend: str = "jnp"):
+    """Serial chunk: state buffers donated, objective returned as a
+    device scalar (no host sync), one compile for all chunk lengths up
+    to ``chunk_steps``."""
+    return chunk_body(state, key, xp, xm, params, num_steps,
+                      chunk_steps=chunk_steps, axis_name=None,
+                      backend=backend)
+
+
+def drive(state, key, num_iters: int, chunk: int, run) -> tuple:
+    """Shared host loop: split one key per chunk, dispatch fixed-shape
+    chunks, accumulate device scalars, transfer history ONCE at the end.
+
+    ``run(state, subkey, steps_remaining) -> (state, obj)`` is the
+    mode-specific jitted chunk.  Returns (state, [(done, obj), ...]).
+    """
+    import numpy as np
+
+    objs, marks = [], []
+    done = 0
+    while done < num_iters:
+        key, sub = jax.random.split(key)
+        ns = min(chunk, num_iters - done)
+        state, obj = run(state, sub, ns)
+        done += ns
+        objs.append(obj)
+        marks.append(done)
+    # per-client objectives (k,) are identical across clients; take [0]
+    objs = [float(np.asarray(o).reshape(-1)[0]) for o in jax.device_get(objs)]
+    return state, list(zip(marks, objs))

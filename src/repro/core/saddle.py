@@ -5,6 +5,13 @@ Layout convention: point matrices are stored ROW-major, ``xp[i] = x_i^+``
 (shape (n1, d)).  The paper's column ``X_{.i}`` (point i) is ``xp[i]``,
 and the sampled coordinate row ``X_{i*,.}`` is ``xp[:, i*]``.
 
+The actual iteration lives in :mod:`repro.core.engine` -- ONE fused step
+shared by this serial front end, the distributed solver
+(:mod:`repro.core.distributed`), and the Pallas-kernel backend
+(``backend="pallas"`` / ``use_kernels=True``).  This module keeps the
+paper-facing API: parameter formulas (Algorithm 1 line 4), state init,
+the objective/saddle-gap diagnostics, and :func:`solve`.
+
 Faithfulness notes:
   * With ``block_size=1`` this is exactly Algorithm 2: one uniformly
     random coordinate i* per iteration, momentum theta on the duals,
@@ -14,9 +21,9 @@ Faithfulness notes:
     incrementally (rank-1 update) so one iteration costs O(n), matching
     Theorem 6.
   * ``block_size=B>1`` is the beyond-paper TPU block-coordinate mode
-    (DESIGN.md section 2): B lane-aligned coordinates per iteration with
-    d_eff = d/B replacing d in (sigma, tau, theta) and in the primal
-    momentum.  B=1 recovers the paper exactly.
+    (DESIGN.md section 2): B lane-aligned coordinates per iteration,
+    sampled WITHOUT replacement so the rank-B update of u stays exact.
+    B=1 recovers the paper exactly.
 """
 
 from __future__ import annotations
@@ -28,7 +35,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import projections
+from repro.core import engine
 
 
 class SaddleParams(NamedTuple):
@@ -69,6 +76,10 @@ def make_params(n: int, d: int, eps: float, beta: float,
                   a block step as B averaged coordinate steps); measured
                   strictly worse -- kept for the ablation.
     """
+    if not 1 <= block_size <= d:
+        raise ValueError(
+            f"block_size={block_size} must be in [1, d={d}] (blocks are "
+            "sampled without replacement)")
     gamma = eps * beta / (2.0 * math.log(max(n, 3)))
     q = max(1.0, math.sqrt(math.log(max(n, 3))))
     d_eff = d / block_size if block_scaling == "scaled" else d
@@ -92,10 +103,12 @@ def init_state(n1: int, n2: int, d: int,
     del xp, xm  # u starts at zero because w starts at zero
     log_eta = jnp.full((n1,), -math.log(n1), jnp.float32)
     log_xi = jnp.full((n2,), -math.log(n2), jnp.float32)
+    # distinct buffers for the "prev" copies: the engine donates the
+    # state, and XLA rejects donating the same buffer twice
     return SaddleState(
         w=jnp.zeros((d,), jnp.float32),
-        log_eta=log_eta, log_eta_prev=log_eta,
-        log_xi=log_xi, log_xi_prev=log_xi,
+        log_eta=log_eta, log_eta_prev=jnp.copy(log_eta),
+        log_xi=log_xi, log_xi_prev=jnp.copy(log_xi),
         u_p=jnp.zeros((n1,), jnp.float32),
         u_m=jnp.zeros((n2,), jnp.float32),
         t=jnp.zeros((), jnp.int32),
@@ -104,100 +117,16 @@ def init_state(n1: int, n2: int, d: int,
 
 def saddle_step(state: SaddleState, key: jax.Array, xp: jax.Array,
                 xm: jax.Array, p: SaddleParams) -> SaddleState:
-    """One iteration of Algorithm 2 (vectorized over a coordinate block)."""
-    d, b = p.d, p.block_size
-    d_eff = d / b
-    idx = jax.random.randint(key, (b,), 0, d)        # i* (uniform)
-    cols_p = xp[:, idx]                              # (n1, B) row X_{i*,.}
-    cols_m = xm[:, idx]                              # (n2, B)
-
-    eta = jnp.exp(state.log_eta)
-    eta_prev = jnp.exp(state.log_eta_prev)
-    xi = jnp.exp(state.log_xi)
-    xi_prev = jnp.exp(state.log_xi_prev)
-
-    # Lines 2-3: momentum-extrapolated dual dot products.
-    mom_eta = eta + p.theta * (eta - eta_prev)
-    mom_xi = xi + p.theta * (xi - xi_prev)
-    delta_p = cols_p.T @ mom_eta                     # (B,)
-    delta_m = cols_m.T @ mom_xi
-
-    # Line 4: proximal coordinate update of w at the sampled coordinates.
-    w_old = state.w[idx]
-    w_new = (w_old + p.sigma * (delta_p - delta_m)) / (p.sigma + 1.0)
-    dw = w_new - w_old                               # (B,)
-
-    # v_i = <w[t] + d_eff*(w[t+1]-w[t]), x_i> via the incremental u.
-    dv_p = cols_p @ dw                               # (n1,) rank-B update
-    dv_m = cols_m @ dw
-    v_p = state.u_p + d_eff * dv_p
-    v_m = state.u_m + d_eff * dv_m
-
-    # Lines 5-6: entropy-prox (MWU) updates; nu-Saddle adds Rule 2.
-    if p.nu > 0.0:
-        log_eta_new = projections.capped_entropy_prox(
-            state.log_eta, v_p, p.gamma, p.tau, d_eff, p.nu)
-        log_xi_new = projections.capped_entropy_prox(
-            state.log_xi, -v_m, p.gamma, p.tau, d_eff, p.nu)
-    else:
-        log_eta_new = projections.entropy_prox(
-            state.log_eta, v_p, p.gamma, p.tau, d_eff)
-        log_xi_new = projections.entropy_prox(
-            state.log_xi, -v_m, p.gamma, p.tau, d_eff)
-
-    return SaddleState(
-        w=state.w.at[idx].set(w_new),
-        log_eta=log_eta_new, log_eta_prev=state.log_eta,
-        log_xi=log_xi_new, log_xi_prev=state.log_xi,
-        u_p=state.u_p + dv_p, u_m=state.u_m + dv_m,
-        t=state.t + 1,
-    )
+    """One iteration of Algorithm 2 (thin wrapper over the engine)."""
+    return engine.step(state, key, xp, xm, p)
 
 
 def saddle_step_kernels(state: SaddleState, key: jax.Array, xp: jax.Array,
                         xm: jax.Array, p: SaddleParams) -> SaddleState:
-    """Algorithm 2 iteration backed by the Pallas kernels
-    (repro.kernels: momentum_dot + fused mwu_update).  Numerically
-    equivalent to :func:`saddle_step` (tested); used on TPU builds and
-    validated here in interpret mode."""
-    from repro.kernels import ops as kops
-
-    d, b = p.d, p.block_size
-    d_eff = d / b
-    idx = jax.random.randint(key, (b,), 0, d)
-    cols_p = xp[:, idx]
-    cols_m = xm[:, idx]
-
-    delta_p = kops.momentum_dot(cols_p, state.log_eta, state.log_eta_prev,
-                                p.theta)
-    delta_m = kops.momentum_dot(cols_m, state.log_xi, state.log_xi_prev,
-                                p.theta)
-
-    w_old = state.w[idx]
-    w_new = (w_old + p.sigma * (delta_p - delta_m)) / (p.sigma + 1.0)
-    dw = w_new - w_old
-
-    log_eta_new, u_p_new = kops.mwu_update(
-        cols_p, state.log_eta, state.u_p, dw,
-        sign=1.0, gamma=p.gamma, tau=p.tau, d_eff=d_eff)
-    log_xi_new, u_m_new = kops.mwu_update(
-        cols_m, state.log_xi, state.u_m, dw,
-        sign=-1.0, gamma=p.gamma, tau=p.tau, d_eff=d_eff)
-    if p.nu > 0.0:
-        log_eta_new = jnp.log(jnp.maximum(
-            projections.capped_simplex_project_sorted(
-                jnp.exp(log_eta_new), p.nu), 1e-38))
-        log_xi_new = jnp.log(jnp.maximum(
-            projections.capped_simplex_project_sorted(
-                jnp.exp(log_xi_new), p.nu), 1e-38))
-
-    return SaddleState(
-        w=state.w.at[idx].set(w_new),
-        log_eta=log_eta_new, log_eta_prev=state.log_eta,
-        log_xi=log_xi_new, log_xi_prev=state.log_xi,
-        u_p=u_p_new, u_m=u_m_new,
-        t=state.t + 1,
-    )
+    """Algorithm 2 iteration backed by the Pallas kernels (same engine
+    step behind ``backend="pallas"``); numerically equivalent to
+    :func:`saddle_step` (tested), validated here in interpret mode."""
+    return engine.step(state, key, xp, xm, p, backend="pallas")
 
 
 @functools.partial(jax.jit,
@@ -205,14 +134,16 @@ def saddle_step_kernels(state: SaddleState, key: jax.Array, xp: jax.Array,
 def run_chunk(state: SaddleState, key: jax.Array, xp: jax.Array,
               xm: jax.Array, params: SaddleParams, num_steps: int,
               use_kernels: bool = False) -> SaddleState:
-    """Run ``num_steps`` iterations under jit (scan over PRNG keys)."""
-    step = saddle_step_kernels if use_kernels else saddle_step
+    """Run exactly ``num_steps`` iterations under jit.
 
-    def body(st, k):
-        return step(st, k, xp, xm, params), None
-
-    keys = jax.random.split(key, num_steps)
-    state, _ = jax.lax.scan(body, state, keys)
+    Compatibility entry point: compiles per distinct ``num_steps``
+    (it is static here).  Chunked solves should use
+    :func:`engine.run_chunk`, whose dynamic trip count compiles once
+    for all chunk lengths (see :func:`solve`).
+    """
+    backend = "pallas" if use_kernels else "jnp"
+    state, _ = engine.chunk_body(state, key, xp, xm, params, num_steps,
+                                 chunk_steps=num_steps, backend=backend)
     return state
 
 
@@ -265,6 +196,11 @@ def solve(xp: jax.Array, xm: jax.Array, *, eps: float = 1e-3,
     Args:
       xp, xm: (n1, d), (n2, d) transformed point matrices.
       nu: 0 for hard margin; else the nu-SVM cap (must be >= 1/min(n1,n2)).
+
+    All chunks share ONE executable (the chunk's trip count is dynamic,
+    so the final partial chunk neither recompiles nor executes padded
+    steps) and the objective history stays on device until a single
+    transfer at the end.
     """
     n1, d = xp.shape
     n2 = xm.shape[0]
@@ -276,16 +212,14 @@ def solve(xp: jax.Array, xm: jax.Array, *, eps: float = 1e-3,
         num_iters = default_iterations(d, eps, beta, n1 + n2)
     num_iters = max(1, num_iters // block_size)
     state = init_state(n1, n2, d, xp, xm)
-    key = jax.random.key(seed)
-    chunk = record_every or num_iters
-    history = []
-    done = 0
-    while done < num_iters:
-        key, sub = jax.random.split(key)
-        n_steps = min(chunk, num_iters - done)
-        state = run_chunk(state, sub, xp, xm, params, n_steps,
-                          use_kernels)
-        done += n_steps
-        history.append((done, float(objective(state.log_eta, state.log_xi,
-                                              xp, xm))))
+    chunk = min(record_every or num_iters, num_iters)
+    backend = "pallas" if use_kernels else "jnp"
+    xp_j, xm_j = jnp.asarray(xp), jnp.asarray(xm)
+
+    def run(st, sub, ns):
+        return engine.run_chunk(st, sub, xp_j, xm_j, ns, params=params,
+                                chunk_steps=chunk, backend=backend)
+
+    state, history = engine.drive(state, jax.random.key(seed),
+                                  num_iters, chunk, run)
     return SolveResult(state=state, history=history)

@@ -31,8 +31,11 @@ def momentum_dot(cols, log_lam, log_prev, theta, *, interpret=True):
 
 
 def mwu_update(cols, log_lam, u, dw, *, sign, gamma, tau, d_eff,
-               interpret=True):
+               interpret=True, normalize=True):
+    """Fused dual update; ``normalize=False`` returns the unnormalized
+    log weights plus (m, s) normalizer partials with lse = m + log(s)
+    (used by the solver engine to all-reduce across clients)."""
     return _su.mwu_update(cols, log_lam, u, dw,
                           jnp.asarray(sign), jnp.asarray(gamma),
                           jnp.asarray(tau), jnp.asarray(d_eff),
-                          interpret=interpret)
+                          interpret=interpret, normalize=normalize)

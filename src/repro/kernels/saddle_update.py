@@ -89,12 +89,16 @@ def _mwu_kernel(cols_ref, log_lam_ref, u_ref, dw_ref, scal_ref,
     psum_ref[...] = jnp.sum(jnp.exp(log_new - tile_max)).reshape(1)
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("tile", "interpret", "normalize"))
 def mwu_update(cols: jax.Array, log_lam: jax.Array, u: jax.Array,
                dw: jax.Array, sign: jax.Array, gamma: jax.Array,
                tau: jax.Array, d_eff: jax.Array, *, tile: int = 1024,
-               interpret: bool = True):
-    """Fused dual update.  Returns (log_new_normalized, u_new)."""
+               interpret: bool = True, normalize: bool = True):
+    """Fused dual update.  Returns (log_new_normalized, u_new), or --
+    with ``normalize=False`` -- (log_new_unnormalized, u_new, m, s)
+    where lse = m + log(s), so a caller can combine the normalizer
+    partials across clients (distributed rounds 2-3) before applying."""
     n, b = cols.shape
     tile = min(tile, max(n, 1))
     pad = (-n) % tile
@@ -131,5 +135,8 @@ def mwu_update(cols: jax.Array, log_lam: jax.Array, u: jax.Array,
         interpret=interpret,
     )(cols, log_lam, u, dw, scal)
     # combine per-tile (max, sumexp) partials into the global logsumexp
-    lse = jax.scipy.special.logsumexp(pmax + jnp.log(psum))
-    return (log_new - lse)[:n], u_new[:n]
+    m = jnp.max(pmax)
+    s = jnp.sum(psum * jnp.exp(pmax - m))
+    if not normalize:
+        return log_new[:n], u_new[:n], m, s
+    return (log_new - (m + jnp.log(s)))[:n], u_new[:n]

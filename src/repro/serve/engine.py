@@ -62,9 +62,12 @@ def sample(logits, key, temperature: float = 0.0):
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "steps",
-                                             "temperature"))
+                                             "temperature"),
+                   donate_argnums=(2,))
 def _decode_loop(params, cfg, state: ServeState, key, steps: int,
                  temperature: float):
+    # the prefill cache is donated: the decode scan updates the KV
+    # buffers in place instead of copying the whole cache on entry
     def body(carry, _):
         st, k = carry
         k, sub = jax.random.split(k)

@@ -1,0 +1,41 @@
+"""Import shim so property-based tests degrade to per-test skips instead
+of module-level collection errors when ``hypothesis`` is not installed
+(the seed image ships without it; see requirements-dev.txt).
+
+Usage in a test module::
+
+    from _hypothesis_stub import given, settings, st
+
+With hypothesis installed these are the real objects; without it,
+``@given(...)`` marks the test skipped and the strategy expressions
+evaluate to inert placeholders.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (pip install -r "
+                       "requirements-dev.txt)")(fn)
+        return deco
+
+    class _InertStrategies:
+        """st.integers(...) etc. evaluate at decoration time; return
+        inert placeholders so module import succeeds."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _InertStrategies()

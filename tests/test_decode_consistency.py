@@ -13,6 +13,10 @@ from repro.configs import get_config
 from repro.models import transformer as tf
 from repro.serve import engine
 
+# LM-side model/system tests dominate the full-suite runtime; the fast
+# CI tier (scripts/ci.sh) deselects them with -m 'not slow'
+pytestmark = pytest.mark.slow
+
 FAMILIES = [
     ("h2o-danube-1.8b", {}),              # GQA + SWA ring
     ("gemma-7b", {}),                     # GQA full cache

@@ -100,7 +100,10 @@ assert np.allclose(w_ser, w_dist, atol=1e-4), np.abs(w_ser-w_dist).max()
 print("SHARD_MAP_OK")
 """
     env = dict(os.environ)
-    env.pop("JAX_PLATFORMS", None)
+    # pin the subprocess to CPU: with JAX_PLATFORMS unset, a libtpu
+    # build probes TPU metadata for minutes before falling back, and
+    # --xla_force_host_platform_device_count only applies to cpu anyway
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", code],
                          capture_output=True, text=True,
                          cwd=os.path.join(os.path.dirname(__file__), ".."),

@@ -1,0 +1,147 @@
+"""The fused solver engine (repro.core.engine): backend/mode parity,
+block-sampling correctness, and the compile-once chunk driver."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import distributed as dist
+from repro.core import engine
+from repro.core import preprocess as pp
+from repro.core import saddle
+
+
+@pytest.fixture(scope="module")
+def problem():
+    """Non-divisible n (37, 53): every k > 1 exercises padding points."""
+    rng = np.random.default_rng(0)
+    d = 16
+    xp = rng.normal(size=(37, d)).astype(np.float32) * 0.3 + 0.4
+    xm = rng.normal(size=(53, d)).astype(np.float32) * 0.3 - 0.4
+    pre = pp.preprocess(xp, xm, jax.random.key(1))
+    return np.asarray(pre.xp), np.asarray(pre.xm)
+
+
+# ------------------------------------------------------------ parity
+@pytest.mark.parametrize("nu_frac", [0.0, 0.8])
+def test_serial_dist_kernel_parity(problem, nu_frac):
+    """Serial, distributed-sim, and Pallas-kernel backends are the SAME
+    engine step, so their iterates must coincide -- for nu = 0 and
+    nu > 0, with padding points active (n1=37, n2=53 not divisible by
+    k=5)."""
+    xp, xm = problem
+    nu = nu_frac and 1.0 / (nu_frac * xp.shape[0])
+    ser = saddle.solve(xp, xm, nu=nu, num_iters=300)
+    ker = saddle.solve(xp, xm, nu=nu, num_iters=300, use_kernels=True)
+    d5 = dist.solve_distributed(xp, xm, k=5, nu=nu, num_iters=300)
+    w = np.asarray(ser.state.w)
+    np.testing.assert_allclose(w, np.asarray(ker.state.w), atol=1e-5)
+    np.testing.assert_allclose(w, np.asarray(d5.state.w[0]), atol=1e-5)
+    # dual parity through the round-robin unshard (padding dropped)
+    eta, xi = dist.gather_duals(d5.state, xp.shape[0], xm.shape[0], 5)
+    np.testing.assert_allclose(np.exp(np.asarray(ser.state.log_eta)),
+                               eta, atol=1e-5)
+    np.testing.assert_allclose(np.exp(np.asarray(ser.state.log_xi)),
+                               xi, atol=1e-5)
+
+
+def test_gather_duals_rejects_wrong_k(problem):
+    xp, xm = problem
+    d5 = dist.solve_distributed(xp, xm, k=5, num_iters=10)
+    with pytest.raises(ValueError):
+        dist.gather_duals(d5.state, xp.shape[0], xm.shape[0], 4)
+
+
+# ------------------------------------------- block sampling correctness
+def test_sample_block_without_replacement():
+    """Coordinate blocks must be duplicate-free: a repeated index makes
+    w.at[idx].set last-write-wins while cols @ dw double-counts the
+    column in u (the seed bug)."""
+    d, b = 32, 8
+    for seed in range(50):
+        idx = np.asarray(engine.sample_block(jax.random.key(seed), d, b))
+        assert len(np.unique(idx)) == b
+        assert idx.min() >= 0 and idx.max() < d
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_block_mode_u_invariant(problem, use_kernels):
+    """u_p == xp @ w exactly (up to float error) after many block steps:
+    the incremental rank-B update stays consistent only when sampling is
+    without replacement."""
+    xp, xm = problem
+    res = saddle.solve(xp, xm, num_iters=200, block_size=4,
+                       use_kernels=use_kernels)
+    w = np.asarray(res.state.w)
+    np.testing.assert_allclose(np.asarray(res.state.u_p), xp @ w,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(res.state.u_m), xm @ w,
+                               atol=2e-4)
+
+
+def test_block_mode_u_invariant_distributed(problem):
+    """Same invariant per client shard in the distributed simulation."""
+    xp, xm = problem
+    res = dist.solve_distributed(xp, xm, k=5, num_iters=200, block_size=4)
+    xp_sh, _ = dist.shard_points(xp, 5)
+    w = np.asarray(res.state.w[0])
+    for c in range(5):
+        np.testing.assert_allclose(np.asarray(res.state.u_p[c]),
+                                   xp_sh[c] @ w, atol=2e-4)
+
+
+def test_block_size_exceeding_d_rejected(problem):
+    """Without-replacement sampling caps the block at d coordinates, so
+    a larger request is a configuration error, not a silent truncation."""
+    xp, xm = problem
+    with pytest.raises(ValueError):
+        saddle.solve(xp, xm, num_iters=10, block_size=xp.shape[1] + 1)
+
+
+# ------------------------------------------------- compile-once driver
+def test_run_chunk_compiles_once_with_partial_final_chunk(problem):
+    """A record_every-chunked solve whose final chunk is partial (250 =
+    97 + 97 + 56) must trace/compile the chunk exactly once: the trip
+    count is dynamic, only the key shape is static."""
+    xp, xm = problem
+    snap = dict(engine.trace_counts)
+    res = saddle.solve(xp, xm, num_iters=250, record_every=97)
+    delta = {k: v - snap.get(k, 0) for k, v in engine.trace_counts.items()
+             if v != snap.get(k, 0)}
+    assert delta == {(None, "jnp", 97): 1}, delta
+    assert [h[0] for h in res.history] == [97, 194, 250]
+    # the partial chunk really ran only 56 steps
+    assert int(res.state.t) == 250
+
+
+def test_partial_chunk_matches_stepwise_replay(problem):
+    """A partial chunk (56 of 97) runs exactly the first 56 of the
+    pre-split keys -- no more, no fewer, none of the padded tail."""
+    import jax.numpy as jnp
+    xp, xm = problem
+    params = saddle.make_params(xp.shape[0] + xm.shape[0], xp.shape[1],
+                                1e-3, 0.1)
+    key = jax.random.key(7)
+    xp_j, xm_j = jnp.asarray(xp), jnp.asarray(xm)
+
+    st = saddle.init_state(xp.shape[0], xm.shape[0], xp.shape[1], xp, xm)
+    got, _ = engine.run_chunk(st, key, xp_j, xm_j, 56, params=params,
+                              chunk_steps=97)
+
+    want = saddle.init_state(xp.shape[0], xm.shape[0], xp.shape[1],
+                             xp, xm)
+    for k in jax.random.split(key, 97)[:56]:
+        want = engine.step(want, k, xp_j, xm_j, params)
+    np.testing.assert_allclose(np.asarray(got.w), np.asarray(want.w),
+                               atol=1e-6)
+    assert int(got.t) == 56 == int(want.t)
+
+
+def test_history_recorded_on_device(problem):
+    """History objectives agree with the host-side recomputation."""
+    xp, xm = problem
+    res = saddle.solve(xp, xm, num_iters=120, record_every=60)
+    want = float(saddle.objective(res.state.log_eta, res.state.log_xi,
+                                  xp, xm))
+    assert res.history[-1][0] == 120
+    assert abs(res.history[-1][1] - want) < 1e-6

@@ -13,6 +13,10 @@ from repro.models import transformer as tf
 from repro.train import optimizer as opt
 from repro.train import steps
 
+# LM-side model/system tests dominate the full-suite runtime; the fast
+# CI tier (scripts/ci.sh) deselects them with -m 'not slow'
+pytestmark = pytest.mark.slow
+
 ASSIGNED = [
     "qwen2-vl-7b", "chatglm3-6b", "xlstm-125m", "recurrentgemma-2b",
     "deepseek-v2-236b", "deepseek-v2-lite-16b", "gemma-7b",

@@ -9,6 +9,11 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import moe
+import pytest
+
+# LM-side model/system tests dominate the full-suite runtime; the fast
+# CI tier (scripts/ci.sh) deselects them with -m 'not slow'
+pytestmark = pytest.mark.slow
 
 
 def _cfg(**kw):

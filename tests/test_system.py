@@ -7,6 +7,11 @@ import numpy as np
 from repro.baselines import gilbert
 from repro.core.svm import SaddleNuSVC, SaddleSVC
 from repro.data import synthetic
+import pytest
+
+# LM-side model/system tests dominate the full-suite runtime; the fast
+# CI tier (scripts/ci.sh) deselects them with -m 'not slow'
+pytestmark = pytest.mark.slow
 
 
 def test_saddle_matches_gilbert_end_to_end():

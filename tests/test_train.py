@@ -7,6 +7,11 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.train import checkpoint, optimizer as opt, steps
+import pytest
+
+# LM-side model/system tests dominate the full-suite runtime; the fast
+# CI tier (scripts/ci.sh) deselects them with -m 'not slow'
+pytestmark = pytest.mark.slow
 
 
 def test_loss_decreases_on_fixed_batch():
