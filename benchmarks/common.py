@@ -1,12 +1,18 @@
-"""Shared benchmark helpers: timing + the ``name,us_per_call,derived``
-CSV convention."""
+"""Shared benchmark helpers: timing, the ``name,us_per_call,derived``
+CSV convention, and a machine-readable JSON mirror of every emitted
+metric (``benchmarks/run.py --json`` writes it to ``BENCH_engine.json``
+so CI can track the perf trajectory)."""
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import numpy as np
+
+# Every emit() appends here; run.py serializes it with write_json().
+RESULTS: list[dict] = []
 
 
 def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
@@ -30,8 +36,25 @@ def _block(r):
 
 
 def emit(name: str, seconds: float, derived: str = "") -> None:
+    RESULTS.append({"name": name, "us_per_call": seconds * 1e6,
+                    "notes": derived})
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def emit_count(name: str, count: float, derived: str = "") -> None:
+    """Dimensionless metric (launch counts, ratios): recorded under
+    ``count`` so JSON consumers never mistake it for a timing."""
+    RESULTS.append({"name": name, "count": count, "notes": derived})
+    print(f"{name},{count},{derived}")
 
 
 def header() -> None:
     print("name,us_per_call,derived")
+
+
+def write_json(path: str) -> None:
+    """Serialize every metric emitted so far as a JSON list of
+    {name, us_per_call, notes} records."""
+    with open(path, "w") as f:
+        json.dump(RESULTS, f, indent=2)
+    print(f"# wrote {len(RESULTS)} metrics to {path}")

@@ -1,5 +1,8 @@
 """Pallas kernels (interpret mode on CPU) vs the pure-jnp oracles:
-correctness is in tests/; this reports us_per_call for both paths.
+correctness is in tests/; this reports us_per_call for both paths and
+COUNTS KERNEL LAUNCHES PER ENGINE STEP (the packed single-sweep step
+must launch 2 kernels where the unpacked reference launches 4 --
+asserted here so a regression fails the bench).
 Note: interpret mode measures the *kernel logic* on CPU, not TPU perf --
 TPU numbers come from the roofline analysis."""
 
@@ -9,11 +12,49 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, emit_count, timeit
+from repro.core import engine, preprocess as pp, saddle
 from repro.kernels import ops, ref
 
 
+def _count_launches_per_step() -> None:
+    """Trace one reference step and one packed step with the pallas
+    backend and diff ``ops.launch_counts`` (wrappers tally at trace
+    time; one wrapper call == one kernel launch in the compiled step)."""
+    rng = np.random.default_rng(0)
+    d, n1, n2, b = 16, 40, 50, 4
+    xp = jnp.asarray(rng.normal(size=(n1, d)), jnp.float32)
+    xm = jnp.asarray(rng.normal(size=(n2, d)), jnp.float32)
+    params = saddle.make_params(n1 + n2, d, 1e-3, 0.1, block_size=b)
+    key = jax.random.key(0)
+
+    st = saddle.init_state(n1, n2, d, xp, xm)
+    snap = dict(ops.launch_counts)
+    jax.make_jaxpr(lambda s, k: engine.step(
+        s, k, xp, xm, params, backend="pallas"))(st, key)
+    ref_launches = sum(v - snap.get(name, 0)
+                       for name, v in ops.launch_counts.items())
+
+    pts = pp.pack_points(xp, xm)
+    pst = engine.init_packed_state(pts.sign, n1, n2, d)
+    snap = dict(ops.launch_counts)
+    jax.make_jaxpr(lambda s, k: engine.step_packed(
+        s, k, pts.x_t, pts.sign, params, backend="pallas"))(pst, key)
+    packed_launches = sum(v - snap.get(name, 0)
+                          for name, v in ops.launch_counts.items())
+
+    assert (ref_launches, packed_launches) == (4, 2), (
+        f"kernel launches per step: reference={ref_launches}, "
+        f"packed={packed_launches}, expected (4, 2)")
+    emit_count("kernels/launches_per_step_reference", ref_launches,
+               "momentum_dot x2 + mwu_update x2")
+    emit_count("kernels/launches_per_step_packed", packed_launches,
+               "momentum_dot_packed + mwu_update_packed (4 -> 2)")
+
+
 def run(quick: bool = True) -> None:
+    _count_launches_per_step()
+
     rng = np.random.default_rng(0)
     n, d = (4096, 256) if quick else (65536, 1024)
 
@@ -41,3 +82,21 @@ def run(quick: bool = True) -> None:
 
     t, _ = timeit(lambda: mwu_ref(cols, ll, u, dw))
     emit("kernels/mwu_update_jnp_ref", t, "")
+
+    # packed single-sweep kernels (interpret) vs the packed jnp oracle
+    x_t = jnp.asarray(rng.normal(size=(d, 1024)), jnp.float32)
+    sign = jnp.asarray(np.r_[np.ones(500), -np.ones(500), np.zeros(24)],
+                       jnp.float32)
+    llp = jnp.where(sign != 0, -jnp.log(500.0), engine.NEG_INF)
+    up = jnp.zeros((1024,), jnp.float32)
+    idx = jnp.asarray(rng.choice(d, 8, replace=False).astype(np.int32))
+    dwp = jnp.asarray(rng.normal(size=8) * 0.01, jnp.float32)
+    t, _ = timeit(lambda: ops.mwu_update_packed(
+        x_t, idx, llp, up, dwp, sign, gamma=1e-3, tau=30.0,
+        d_eff=float(d)))
+    emit("kernels/mwu_update_packed_interp", t, "n_pad=1024;b=8")
+
+    pref = jax.jit(ref.mwu_update_packed_ref)
+    t, _ = timeit(lambda: pref(x_t, idx, llp, up, dwp, sign, 1e-3, 30.0,
+                               float(d)))
+    emit("kernels/mwu_update_packed_jnp_ref", t, "")

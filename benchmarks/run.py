@@ -9,7 +9,7 @@ from benchmarks import (engine_bench, fig1_nusvm_convergence,
                         fig4_dist_nusvm, kernels_bench, roofline,
                         table1_hard_margin, table3_nu_sweep,
                         table4_density, theory_iters_comm)
-from benchmarks.common import emit, header
+from benchmarks.common import emit, header, write_json
 
 SUITES = [
     ("table1", table1_hard_margin),
@@ -32,6 +32,9 @@ def main() -> None:
                     help="comma-separated suite names")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write every metric as JSON records "
+                         "(e.g. BENCH_engine.json) for CI tracking")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     header()
@@ -47,6 +50,8 @@ def main() -> None:
             failures.append(name)
             emit(f"{name}/ERROR", 0.0, str(e)[:80])
         emit(f"{name}/suite_total", time.perf_counter() - t0, "")
+    if args.json:
+        write_json(args.json)
     if failures:
         print(f"# FAILED suites: {failures}", file=sys.stderr)
         raise SystemExit(1)

@@ -18,7 +18,14 @@ tier="${1:-fast}"
 shift || true
 
 case "$tier" in
-  fast) exec python -m pytest -q -m "not slow" "$@" ;;
+  fast)
+    python -m pytest -q -m "not slow" "$@"
+    # perf smoke: quick engine bench with machine-readable metrics so
+    # the perf trajectory (packed-step speedup, driver overhead) is
+    # tracked from every fast run.  BENCH_engine.json is gitignored.
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+      python -m benchmarks.run --only engine --json BENCH_engine.json
+    ;;
   full) exec python -m pytest -q "$@" ;;
   *)    echo "usage: scripts/ci.sh [fast|full] [pytest args...]" >&2
         exit 2 ;;

@@ -15,9 +15,14 @@ O(1) scalars over the client axis, so the whole protocol is a handful of
 scalar ``lax.psum``s per iteration -- the TPU-native realization of the
 O(k) communication bound (Theorem 8).
 
-The step itself is :func:`repro.core.engine.step` with
+The step itself is :func:`repro.core.engine.step_packed` with
 ``axis_name=CLIENT_AXIS`` -- the SAME code the serial solver runs (the
-serial path is the k=1 degenerate client).  It executes in two modes:
+serial path is the k=1 degenerate client).  Each client packs its two
+class shards into one +- operand (column-major mirror + sign vector,
+see :func:`repro.core.preprocess.pack_points`), so rounds 1-3 are one
+signed sweep each and round 4 (nu-Saddle) is the fixed-round bisection
+whose per-round traffic is a single (2,) psum.  It executes in two
+modes:
   * ``shard_map`` over a real mesh axis (multi-device / dry-run), or
   * ``jax.vmap(..., axis_name=CLIENT_AXIS)`` over a stacked (k, n/k, ...)
     state -- a bit-exact single-device simulation of k clients (psum is
@@ -39,6 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine
+from repro.core import preprocess
+from repro.core import projections
 from repro.core import saddle
 from repro.core.engine import CLIENT_AXIS, NEG_INF
 from repro.core.saddle import SaddleParams
@@ -61,7 +68,7 @@ class CommModel(NamedTuple):
     """Analytic communication accounting for Algorithm 4 (scalar counts,
     matching the paper's convention of counting numbers exchanged)."""
     k: int
-    nu_rounds_per_iter: float   # 0 for HM-Saddle
+    nu_rounds_per_iter: float   # 0 for HM-Saddle; else BISECT_ROUNDS
 
     def scalars_per_iteration(self) -> float:
         k = self.k
@@ -69,8 +76,15 @@ class CommModel(NamedTuple):
         # round 2: broadcast 2 (2k) + Z's up (2k)
         # round 3: broadcast Z's (2k)
         base = k + 2 * k + 2 * k + 2 * k + 2 * k
-        # each nu projection round: 4 scalars up (4k) + 4 down (4k)
-        return base + self.nu_rounds_per_iter * 8 * k
+        # round 4 (nu-Saddle): the sort-free bisection all-reduces one
+        # (2,) vector per round -- 2 scalars up (2k) + 2 down (2k) --
+        # for a FIXED round count, independent of n and of the data
+        # (the old Rule-3 loop was data-dependent, up to ceil(1/nu)
+        # rounds of 8k), plus two fixed out-of-loop all-reduces: the
+        # (2,) per-class feasibility pmax (4k) and the (4,) cap-set
+        # stats psum for the exact rescale (8k)
+        nu_fixed = 12 * k if self.nu_rounds_per_iter else 0
+        return base + self.nu_rounds_per_iter * 4 * k + nu_fixed
 
     def total(self, iters: int) -> float:
         return self.scalars_per_iteration() * iters
@@ -110,6 +124,33 @@ def gather_duals(state: ShardedState, n1: int, n2: int, k: int):
         flat = np.asarray(log_v).T.reshape(-1)   # flat[j*k + c] = v[c, j]
         return np.exp(flat[:n])
     return unshard(state.log_eta, n1), unshard(state.log_xi, n2)
+
+
+def pack_shards(xp_sh: np.ndarray, mask_p: np.ndarray, xm_sh: np.ndarray,
+                mask_m: np.ndarray):
+    """Pack each client's two class shards into the single-sweep +-
+    layout (see preprocess.pack_points): returns the stacked
+    column-major mirrors (k, d, m_pad) and sign vectors (k, m_pad).
+    Round-robin padding slots (mask False) get sign 0, like the lane
+    padding, so they belong to neither class in any masked reduction."""
+    k, m1, d = xp_sh.shape
+    m2 = xm_sh.shape[1]
+    m_pad = preprocess.packed_length(m1 + m2)
+    x = np.zeros((k, m_pad, d), np.float32)
+    x[:, :m1] = xp_sh
+    x[:, m1:m1 + m2] = xm_sh
+    sign = np.zeros((k, m_pad), np.float32)
+    sign[:, :m1] = np.where(mask_p, 1.0, 0.0)
+    sign[:, m1:m1 + m2] = np.where(mask_m, -1.0, 0.0)
+    return np.ascontiguousarray(x.transpose(0, 2, 1)), sign
+
+
+def unpack_sharded_state(pstate: engine.PackedState, m1: int,
+                         m2: int) -> ShardedState:
+    """Slice the stacked packed state back into the per-class
+    ShardedState view (slot layout [eta | xi | lane pad] per client;
+    see engine.unpack_state)."""
+    return engine.unpack_state(pstate, m1, m2, ShardedState)
 
 
 def init_sharded_state(n1: int, n2: int, d: int, mask_p: np.ndarray,
@@ -152,22 +193,44 @@ def run_chunk_sim(state: ShardedState, key: jax.Array, xp: jax.Array,
                     axis_name=CLIENT_AXIS)(state, xp, xm)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("params", "chunk_steps", "backend"),
+                   donate_argnums=(0,))
+def run_chunk_sim_packed(state: engine.PackedState, key: jax.Array,
+                         x_t: jax.Array, sign: jax.Array, num_steps, *,
+                         params: SaddleParams, chunk_steps: int,
+                         backend: str = "jnp"):
+    """Single-device simulation of the packed step: vmap the packed
+    engine chunk over the stacked client axis (dynamic trip count +
+    donated state).  Returns (state, per-client objective (k,))."""
+
+    def one_client(st, x_t_c, sign_c):
+        return engine.chunk_body_packed(
+            st, key, x_t_c, sign_c, params, num_steps,
+            chunk_steps=chunk_steps, axis_name=CLIENT_AXIS,
+            backend=backend)
+
+    return jax.vmap(one_client, in_axes=(0, 0, 0),
+                    axis_name=CLIENT_AXIS)(state, x_t, sign)
+
+
 def make_sharded_runner(mesh: jax.sharding.Mesh, axis: str = CLIENT_AXIS,
                         backend: str = "jnp"):
     """shard_map runner for a real device mesh: the production path used
-    by the multi-pod dry-run (clients = the mesh 'data' axis)."""
+    by the multi-pod dry-run (clients = the mesh 'data' axis), running
+    the packed single-sweep chunk per shard."""
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
     @functools.partial(jax.jit,
                        static_argnames=("params", "chunk_steps"),
                        donate_argnums=(0,))
-    def run(state, key, xp, xm, num_steps, *, params, chunk_steps):
-        def client_fn(st, xp_c, xm_c, key_r, ns_r):
+    def run(state, key, x_t, sign, num_steps, *, params, chunk_steps):
+        def client_fn(st, x_t_c, sign_c, key_r, ns_r):
             st = jax.tree.map(lambda a: a[0], st)        # drop shard dim
-            xp_c, xm_c = xp_c[0], xm_c[0]
-            st, obj = engine.chunk_body(
-                st, key_r, xp_c, xm_c, params, ns_r,
+            x_t_c, sign_c = x_t_c[0], sign_c[0]
+            st, obj = engine.chunk_body_packed(
+                st, key_r, x_t_c, sign_c, params, ns_r,
                 chunk_steps=chunk_steps, axis_name=axis, backend=backend)
             return jax.tree.map(lambda a: a[None], st), obj[None]
 
@@ -175,7 +238,7 @@ def make_sharded_runner(mesh: jax.sharding.Mesh, axis: str = CLIENT_AXIS,
         fn = shard_map(client_fn, mesh=mesh,
                        in_specs=(spec, spec, spec, P(), P()),
                        out_specs=(spec, spec), check_rep=False)
-        return fn(state, xp, xm, key, jnp.asarray(num_steps, jnp.int32))
+        return fn(state, x_t, sign, key, jnp.asarray(num_steps, jnp.int32))
 
     return run
 
@@ -209,28 +272,34 @@ def solve_distributed(xp: np.ndarray, xm: np.ndarray, *, k: int = 20,
 
     xp_sh, mask_p = shard_points(xp, k)
     xm_sh, mask_m = shard_points(xm, k)
-    state = init_sharded_state(n1, n2, d, mask_p, mask_m)
-    xp_sh = jnp.asarray(xp_sh)
-    xm_sh = jnp.asarray(xm_sh)
+    m1, m2 = mask_p.shape[1], mask_m.shape[1]
+    x_t, sign = pack_shards(xp_sh, mask_p, xm_sh, mask_m)
+    x_t = jnp.asarray(x_t)
+    sign = jnp.asarray(sign)
+    state = engine.init_packed_state(sign, n1, n2, d)
     chunk = min(record_every or num_iters, num_iters)
     backend = "pallas" if use_kernels else "jnp"
 
     if mesh is not None:
         runner = make_sharded_runner(mesh, backend=backend)
-        run = lambda st, kk, ns: runner(st, kk, xp_sh, xm_sh, ns,
+        run = lambda st, kk, ns: runner(st, kk, x_t, sign, ns,
                                         params=params, chunk_steps=chunk)
     else:
-        run = lambda st, kk, ns: run_chunk_sim(st, kk, xp_sh, xm_sh, ns,
-                                               params=params,
-                                               chunk_steps=chunk,
-                                               backend=backend)
+        run = lambda st, kk, ns: run_chunk_sim_packed(st, kk, x_t, sign,
+                                                      ns, params=params,
+                                                      chunk_steps=chunk,
+                                                      backend=backend)
 
-    # expected projection rounds per iteration (<= 1/nu; typically 1-2)
-    nu_rounds = 2.0 if nu > 0 else 0.0
+    # nu-projection rounds per iteration: the sort-free bisection runs a
+    # FIXED round count (one (2,) psum per round) -- deterministic and
+    # worst-case O(k) scalars, where the data-dependent Rule-3 loop was
+    # worst-case O(k / nu)
+    nu_rounds = float(projections.BISECT_ROUNDS_SOLVER) if nu > 0 else 0.0
     comm = CommModel(k=k, nu_rounds_per_iter=nu_rounds)
 
     state, hist = engine.drive(state, jax.random.key(seed),
                                num_iters, chunk, run)
     history = [(done, comm.total(done), obj) for done, obj in hist]
-    return DistSolveResult(state=state, history=history, comm=comm,
+    return DistSolveResult(state=unpack_sharded_state(state, m1, m2),
+                           history=history, comm=comm,
                            scalars_sent=comm.total(num_iters))

@@ -12,35 +12,74 @@ step ONCE, parameterized along two orthogonal axes:
 
   ``backend``     "jnp"         -> pure jax.numpy step
                   "pallas"      -> the Pallas kernels in
-                                   ``repro.kernels.ops`` for the two
-                                   O(n) passes over the points
+                                   ``repro.kernels.ops``
 
-On top of the step sits a fixed-shape chunk driver:
+Packed single-sweep step
+------------------------
 
-  * ``chunk_body`` pre-splits the per-step keys at a static
+The PRIMARY step (:func:`step_packed`, what ``saddle.solve`` and
+``distributed.solve_distributed`` run) works on the packed +- layout of
+:func:`repro.core.preprocess.pack_points`: both classes live in ONE
+lane-padded point set with a +-1 ``sign`` vector (0 marks lane-padding,
+which also carries log-weight NEG_INF so it contributes exactly 0 to
+every reduction).  The packed state holds THREE point-length vectors
+(``log_lam``, ``log_lam_prev``, ``u``) plus ``w`` where the unpacked
+state needs six, and every per-point pass runs ONCE per step instead of
+once per class:
+
+  pass 1  signed momentum dot: delta = sum_i sign_i mom_i x_t[idx, i]
+          (the sign folds delta+ - delta- into a single sweep)
+  pass 2  MWU update + incremental u + BOTH per-class logsumexp
+          normalizer partials, masked by sign in the same sweep
+
+so the Pallas backend launches 2 kernels per step (vs 4 for the
+unpacked reference).  Coordinate blocks are gathered from the
+column-major mirror ``x_t`` (d, n_pad): a sampled block is b CONTIGUOUS
+rows (``jnp.take(x_t, idx, axis=0)``), not b strided columns of a
+row-major (n, d) matrix; the Pallas kernels go further and gather
+tile-by-tile inside the kernel from scalar-prefetched indices, never
+materializing a cols intermediate.
+
+The nu-Saddle capped-simplex projection is SORT-FREE: a fixed-round
+bisection on the cap scale (the shared core
+:func:`repro.core.projections.capped_bisect_masked`) whose every round
+is one masked O(n) reduction -- both classes share the sweep, and
+under an axis each round all-reduces a single (2,) vector, so the
+round-4 budget is a DETERMINISTIC O(k) scalars per iteration
+(BISECT_ROUNDS_SOLVER two-scalar all-reduces; Theorem 8).  The
+reference path pays an O(n log n) argsort + scatter per class per
+iteration serially, and a data-dependent loop -- worst case O(1/nu)
+rounds -- distributed.
+
+The unpacked :func:`step` is retained as the reference oracle the
+packed path is parity-tested against (serial/distributed x jnp/pallas x
+nu=0/nu>0) and as the baseline ``benchmarks/engine_bench.py`` measures
+the packed speedup over.
+
+On top of either step sits the fixed-shape chunk driver:
+
+  * ``chunk_body*`` pre-splits the per-step keys at a static
     ``chunk_steps`` shape but runs the step under a ``fori_loop`` with
     a DYNAMIC trip count, so one executable serves every chunk length
-    and the padded tail of a partial final chunk is never executed --
-    the seed driver re-jitted its scan for each distinct ``num_steps``
-    (e.g. the partial final chunk of a ``record_every``-chunked solve).
-  * ``run_chunk`` (the serial jit wrapper) donates the state buffers
+    and the padded tail of a partial final chunk is never executed.
+  * ``run_chunk*`` (the serial jit wrappers) donate the state buffers
     (``donate_argnums``) so the solver state is updated in place.
   * The objective is computed on device at the end of each chunk and
     returned as a device scalar; drivers accumulate those and do ONE
-    host transfer at the end of the solve instead of a blocking
-    ``float(...)`` sync per chunk.
+    host transfer at the end of the solve.
 
-Coordinate blocks are sampled WITHOUT replacement.  With replacement
-(the seed behavior), a duplicated index made ``w.at[idx].set(w_new)``
-last-write-wins while ``cols @ dw`` double-counted that column in the
-incremental inner products ``u_p``/``u_m``, silently corrupting the
-invariant ``u == X w``.
+Coordinate blocks are sampled WITHOUT replacement (a duplicated index
+would corrupt the incremental invariant ``u == X w``) by a partial
+Fisher--Yates shuffle: b swap rounds on an iota array, O(d + b) work
+per draw instead of the O(d log d) full ``jax.random.permutation``.
 """
 
 from __future__ import annotations
 
 import collections
 import functools
+import math
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +89,7 @@ from repro.core import projections
 CLIENT_AXIS = "clients"
 NEG_INF = -1e30     # log-weight of padding points (exp() == 0 exactly)
 
-# Incremented at TRACE time inside chunk_body, keyed by the static
+# Incremented at TRACE time inside the chunk bodies, keyed by the static
 # configuration -- i.e. it counts XLA compilations, not calls.  Tests
 # use this to assert that chunked solves with a partial final chunk
 # compile the chunk exactly once.
@@ -58,11 +97,25 @@ trace_counts: collections.Counter = collections.Counter()
 
 
 def sample_block(key: jax.Array, d: int, b: int) -> jax.Array:
-    """b distinct coordinates, uniform without replacement (b=1 keeps
-    the cheap single-draw path; the distributions coincide)."""
+    """b distinct coordinates, uniform without replacement, via a
+    partial Fisher--Yates shuffle: swap slot i with a uniform slot in
+    [i, d) for i < b, then read the b-prefix.  O(d + b) work -- the
+    full ``jax.random.permutation`` sort is O(d log d) for b << d --
+    and exactly the uniform without-replacement distribution (each
+    prefix outcome has probability 1 / (d (d-1) ... (d-b+1))).
+    b=1 keeps the cheap single-draw path; the distributions coincide.
+    """
     if b == 1:
         return jax.random.randint(key, (1,), 0, d)
-    return jax.random.permutation(key, d)[:b]
+    offs = jnp.arange(b)
+    swap = offs + jax.random.randint(key, (b,), 0, d - offs)  # j_i ~ U[i, d)
+
+    def body(i, a):
+        ai, aj = a[i], a[swap[i]]
+        return a.at[i].set(aj).at[swap[i]].set(ai)
+
+    arr = jax.lax.fori_loop(0, b, body, jnp.arange(d))
+    return arr[:b]
 
 
 def _all_sum(x, axis_name):
@@ -72,6 +125,11 @@ def _all_sum(x, axis_name):
 def _all_max(x, axis_name):
     return x if axis_name is None else jax.lax.pmax(x, axis_name)
 
+
+# ==========================================================================
+# Reference (unpacked) step: two passes per class, retained as the
+# parity oracle and the engine_bench baseline.
+# ==========================================================================
 
 def _dual_update(cols, log_lam, u, dw, sign, p, axis_name, backend):
     """Lines 5-6 of Algorithm 2 + incremental u maintenance, normalized
@@ -102,8 +160,9 @@ def _dual_update(cols, log_lam, u, dw, sign, p, axis_name, backend):
 
 
 def _capped_project(log_lam, nu, axis_name):
-    """Rule 2 (serial: one sort) or the distributed Rule-3 loop (round 4
-    of Algorithm 4: psum'd (varsigma, Omega) until varsigma == 0)."""
+    """Reference nu-projection: Rule 2 (serial: one sort per iteration)
+    or the distributed Rule-3 loop (round 4 of Algorithm 4).  The packed
+    step replaces both with the sort-free fixed-round bisection."""
     if axis_name is None:
         eta = projections.capped_simplex_project_sorted(
             jnp.exp(log_lam), nu)
@@ -134,7 +193,9 @@ def _capped_project(log_lam, nu, axis_name):
 
 def step(state, key: jax.Array, xp: jax.Array, xm: jax.Array, p, *,
          axis_name: str | None = None, backend: str = "jnp"):
-    """One Algorithm-2/4 iteration from a single client's viewpoint.
+    """One REFERENCE Algorithm-2/4 iteration from a single client's
+    viewpoint (two passes per class; the production path is
+    :func:`step_packed`).
 
     ``state`` is any NamedTuple with the canonical eight fields
     (SaddleState / ShardedState); the same type is returned.  ``xp`` and
@@ -202,15 +263,9 @@ def objective_from_state(state, xp, xm, axis_name=None) -> jax.Array:
 def chunk_body(state, key, xp, xm, params, num_steps, *,
                chunk_steps: int, axis_name: str | None = None,
                backend: str = "jnp"):
-    """Run ``num_steps`` (dynamic) of at most ``chunk_steps`` (static)
-    iterations and record the objective on device.
-
-    The per-step keys are pre-split at the FIXED shape ``chunk_steps``
-    while the trip count stays dynamic, so one executable serves every
-    chunk length (the seed driver re-jitted its scan per distinct
-    length) and a partial final chunk both reuses the executable AND
-    skips the padded tail entirely (``fori_loop``, not a masked scan).
-    Returns (new_state, objective_scalar)."""
+    """Reference chunk: run ``num_steps`` (dynamic) of at most
+    ``chunk_steps`` (static) unpacked iterations and record the
+    objective on device.  Returns (new_state, objective_scalar)."""
     trace_counts[(axis_name, backend, chunk_steps)] += 1  # trace-time only
 
     keys = jax.random.split(key, chunk_steps)
@@ -228,12 +283,200 @@ def chunk_body(state, key, xp, xm, params, num_steps, *,
                    donate_argnums=(0,))
 def run_chunk(state, key, xp, xm, num_steps, *, params, chunk_steps: int,
               backend: str = "jnp"):
-    """Serial chunk: state buffers donated, objective returned as a
-    device scalar (no host sync), one compile for all chunk lengths up
-    to ``chunk_steps``."""
+    """Serial reference chunk: state buffers donated, objective returned
+    as a device scalar (no host sync), one compile for all chunk lengths
+    up to ``chunk_steps``."""
     return chunk_body(state, key, xp, xm, params, num_steps,
                       chunk_steps=chunk_steps, axis_name=None,
                       backend=backend)
+
+
+# ==========================================================================
+# Packed single-sweep step (the production path)
+# ==========================================================================
+
+
+class PackedState(NamedTuple):
+    """Solver state over the packed +- layout: one point-length vector
+    per role instead of one per class per role.  Slot i belongs to the
+    class given by ``sign[i]`` of the accompanying
+    :class:`repro.core.preprocess.PackedPoints`; padding slots carry
+    log-weight NEG_INF forever."""
+    w: jax.Array             # (d,)
+    log_lam: jax.Array       # (n_pad,)  [log eta | log xi | NEG_INF pad]
+    log_lam_prev: jax.Array  # (n_pad,)
+    u: jax.Array             # (n_pad,)  <w, x_i> maintained incrementally
+    t: jax.Array             # iteration counter
+
+
+def init_packed_state(sign: jax.Array, n1: int, n2: int,
+                      d: int) -> PackedState:
+    """Line 5 of Algorithm 1 on the packed layout: w=0, eta=1/n1,
+    xi=1/n2 (global counts -- under sharding each client passes its own
+    sign slice but the same n1/n2)."""
+    log_lam = jnp.where(
+        sign > 0, -math.log(n1),
+        jnp.where(sign < 0, -math.log(n2), NEG_INF)).astype(jnp.float32)
+    zeros_w = jnp.zeros(sign.shape[:-1] + (d,), jnp.float32)
+    # distinct buffers for the "prev" copy: the chunk drivers donate the
+    # state, and XLA rejects donating the same buffer twice
+    return PackedState(
+        w=zeros_w,
+        log_lam=log_lam, log_lam_prev=jnp.copy(log_lam),
+        u=jnp.zeros_like(log_lam),
+        t=jnp.zeros(sign.shape[:-1], jnp.int32),
+    )
+
+
+def unpack_state(pstate: PackedState, n1: int, n2: int, cls):
+    """Slice a packed state back into the per-class 8-field view
+    (``cls`` is SaddleState or ShardedState -- same field names; the
+    ``...`` slicing serves both the flat and the stacked-client
+    layouts).  Slots [0, n1) are eta, [n1, n1+n2) are xi; the
+    lane-padding tail is dropped."""
+    lam, prev, u = pstate.log_lam, pstate.log_lam_prev, pstate.u
+    return cls(
+        w=pstate.w,
+        log_eta=lam[..., :n1], log_eta_prev=prev[..., :n1],
+        log_xi=lam[..., n1:n1 + n2], log_xi_prev=prev[..., n1:n1 + n2],
+        u_p=u[..., :n1], u_m=u[..., n1:n1 + n2],
+        t=pstate.t,
+    )
+
+
+def _dual_update_packed(x_t, idx, cols_t, log_lam, u, dw, sign, p,
+                        axis_name, backend):
+    """Packed lines 5-6 + incremental u for BOTH classes in one pass,
+    with per-class logsumexp normalizers computed in the same sweep
+    (masked partials) and combined across clients as (2,)-vector
+    all-reduces.  Returns (log_new_normalized, u_new)."""
+    d_eff = p.d / p.block_size
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        log_new, u_new, m_p, s_p, m_m, s_m = kops.mwu_update_packed(
+            x_t, idx, log_lam, u, dw, sign,
+            gamma=p.gamma, tau=p.tau, d_eff=d_eff)
+    else:
+        dv = dw @ cols_t                       # (n_pad,) rank-B update
+        v = sign * (u + d_eff * dv)
+        c = 1.0 / (p.gamma + d_eff / p.tau)
+        log_new = c * ((d_eff / p.tau) * log_lam - v)
+        u_new = u + dv
+        is_p = sign > 0
+        is_m = sign < 0
+        m_p = jnp.max(jnp.where(is_p, log_new, NEG_INF))
+        m_m = jnp.max(jnp.where(is_m, log_new, NEG_INF))
+        s_p = jnp.sum(jnp.where(is_p, jnp.exp(log_new - m_p), 0.0))
+        s_m = jnp.sum(jnp.where(is_m, jnp.exp(log_new - m_m), 0.0))
+    # combine the per-class partials across clients (rounds 2-3): one
+    # (2,) pmax + one (2,) psum
+    m_loc = jnp.stack([m_p, m_m])
+    s_loc = jnp.stack([s_p, s_m])
+    m = _all_max(m_loc, axis_name)
+    s = _all_sum(s_loc * jnp.exp(m_loc - m), axis_name)
+    lse = m + jnp.log(s)
+    return log_new - jnp.where(sign > 0, lse[0], lse[1]), u_new
+
+
+def _capped_project_packed(log_lam, sign, nu, axis_name):
+    """Sort-free round 4: the shared masked bisection core
+    (projections.capped_bisect_masked) over BOTH classes in the same
+    sweep.  Each round reduces one (2,) vector -- under an axis that is
+    one psum of 2 scalars -- for a FIXED BISECT_ROUNDS_SOLVER rounds,
+    so the round-4 scalar budget is deterministic and O(k) (Theorem 8);
+    the reference Rule-3 loop's worst case is O(1/nu) data-dependent
+    rounds.  Padding (sign 0) belongs to neither mask, projects to 0,
+    and so keeps its NEG_INF marker."""
+    masks = jnp.stack([sign > 0, sign < 0])
+    eta = projections.capped_bisect_masked(
+        jnp.exp(log_lam), nu, masks,
+        rounds=projections.BISECT_ROUNDS_SOLVER,
+        all_sum=lambda x: _all_sum(x, axis_name),
+        all_max=lambda x: _all_max(x, axis_name))
+    return jnp.where(eta > 0, jnp.log(jnp.maximum(eta, 1e-38)), NEG_INF)
+
+
+def step_packed(state: PackedState, key: jax.Array, x_t: jax.Array,
+                sign: jax.Array, p, *, axis_name: str | None = None,
+                backend: str = "jnp") -> PackedState:
+    """One PACKED Algorithm-2/4 iteration: both classes in every sweep.
+
+    ``x_t`` is the client's (d, n_pad) column-major mirror and ``sign``
+    its +-1/0 slot vector (see preprocess.pack_points).  Under an axis,
+    the key is identical across clients (the server broadcasts i*).
+    """
+    d, b = p.d, p.block_size
+    idx = sample_block(key, d, b)
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        cols_t = None                    # gathered inside the kernels
+        delta = kops.momentum_dot_packed(
+            x_t, idx, state.log_lam, state.log_lam_prev, sign, p.theta)
+    else:
+        cols_t = jnp.take(x_t, idx, axis=0)          # (B, n_pad) CONTIGUOUS
+        lam = jnp.exp(state.log_lam)
+        lam_prev = jnp.exp(state.log_lam_prev)
+        delta = cols_t @ (sign * (lam + p.theta * (lam - lam_prev)))
+    delta = _all_sum(delta, axis_name)               # round 1
+
+    # Line 4 (round 2): every client performs the identical w update
+    # (delta already IS delta+ - delta-, folded by the sign).
+    w_old = state.w[idx]
+    w_new = (w_old + p.sigma * delta) / (p.sigma + 1.0)
+    dw = w_new - w_old
+
+    # Lines 5-6 (rounds 2-3): ONE packed MWU pass for both classes.
+    log_new, u_new = _dual_update_packed(
+        x_t, idx, cols_t, state.log_lam, state.u, dw, sign, p,
+        axis_name, backend)
+
+    # Round 4: sort-free nu-Saddle capped-simplex projection.
+    if p.nu > 0.0:
+        log_new = _capped_project_packed(log_new, sign, p.nu, axis_name)
+
+    return PackedState(
+        w=state.w.at[idx].set(w_new),
+        log_lam=log_new, log_lam_prev=state.log_lam,
+        u=u_new, t=state.t + 1,
+    )
+
+
+def objective_packed(state: PackedState, x_t: jax.Array, sign: jax.Array,
+                     axis_name=None) -> jax.Array:
+    """0.5 * ||A eta - B xi||^2 from the packed state: the signed dual
+    combination x_t @ (sign * lam) IS A eta - B xi."""
+    diff = x_t @ (sign * jnp.exp(state.log_lam))
+    diff = _all_sum(diff, axis_name)
+    return 0.5 * jnp.sum(diff * diff)
+
+
+def chunk_body_packed(state, key, x_t, sign, params, num_steps, *,
+                      chunk_steps: int, axis_name: str | None = None,
+                      backend: str = "jnp"):
+    """Packed chunk: identical driver discipline to :func:`chunk_body`
+    (static key shape, dynamic trip count, on-device objective)."""
+    trace_counts[("packed", axis_name, backend, chunk_steps)] += 1
+
+    keys = jax.random.split(key, chunk_steps)
+
+    def body(i, st):
+        return step_packed(st, keys[i], x_t, sign, params,
+                           axis_name=axis_name, backend=backend)
+
+    state = jax.lax.fori_loop(0, num_steps, body, state)
+    return state, objective_packed(state, x_t, sign, axis_name)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("params", "chunk_steps", "backend"),
+                   donate_argnums=(0,))
+def run_chunk_packed(state, key, x_t, sign, num_steps, *, params,
+                     chunk_steps: int, backend: str = "jnp"):
+    """Serial packed chunk: state buffers donated, objective returned as
+    a device scalar, one compile for all chunk lengths."""
+    return chunk_body_packed(state, key, x_t, sign, params, num_steps,
+                             chunk_steps=chunk_steps, axis_name=None,
+                             backend=backend)
 
 
 def drive(state, key, num_iters: int, chunk: int, run) -> tuple:

@@ -56,6 +56,73 @@ def fwht(x: jax.Array, *, normalize: bool = True) -> jax.Array:
     return x.reshape(orig_shape)
 
 
+LANE = 128  # TPU lane width; packed point counts are padded to this
+
+
+def packed_length(n: int, lane: int = LANE) -> int:
+    """Smallest multiple of ``lane`` >= n (>= lane, so the Pallas tile
+    grid always divides evenly)."""
+    return max(-(-n // lane), 1) * lane
+
+
+class PackedPoints(NamedTuple):
+    """Both classes packed into ONE lane-padded operand (the single-sweep
+    engine's view of the data; see :mod:`repro.core.engine`).
+
+    Slots ``[0, n1)`` hold the +1 class, ``[n1, n1+n2)`` the -1 class,
+    and the lane-padding tail is all-zero points.  ``sign`` doubles as
+    the validity mask: +1 / -1 for real points, 0 for padding (padding
+    additionally carries log-weight NEG_INF in the solver state, so it
+    contributes exactly 0 to every sum).
+    """
+
+    x_t: jax.Array       # (d, n_pad) COLUMN-major mirror: x_t[c] is
+                         #   coordinate c of every packed point, so a
+                         #   sampled block is b contiguous rows
+    sign: jax.Array      # (n_pad,) +1 class P, -1 class Q, 0 padding
+    n1: int
+    n2: int
+
+    @property
+    def n_pad(self) -> int:
+        return self.x_t.shape[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("n_pad",))
+def _pack(xp, xm, n_pad):
+    n1, d = xp.shape
+    n2 = xm.shape[0]
+    x_t = jnp.zeros((d, n_pad), jnp.float32)
+    x_t = x_t.at[:, :n1].set(xp.T).at[:, n1:n1 + n2].set(xm.T)
+    sign = jnp.zeros((n_pad,), jnp.float32)
+    sign = sign.at[:n1].set(1.0).at[n1:n1 + n2].set(-1.0)
+    return x_t, sign
+
+
+def pack_points(xp: jax.Array, xm: jax.Array,
+                pad_to: int | None = None) -> PackedPoints:
+    """Pack the two (row-major) class matrices into the single-sweep
+    layout: one (d, n_pad) column-major mirror plus the +-1 sign vector.
+
+    The mirror is materialized ONCE here so the per-iteration coordinate
+    block gather ``x_t[idx]`` reads b contiguous rows instead of b
+    strided columns of a row-major (n, d) matrix.
+    """
+    xp = jnp.asarray(xp, jnp.float32)
+    xm = jnp.asarray(xm, jnp.float32)
+    n1, d = xp.shape
+    n2 = xm.shape[0]
+    assert xm.shape[1] == d, "class matrices must share dimensionality"
+    n_pad = packed_length(n1 + n2) if pad_to is None else pad_to
+    if n_pad < n1 + n2:
+        raise ValueError(f"pad_to={pad_to} < n1+n2={n1 + n2}")
+    if n_pad % LANE:
+        raise ValueError(f"pad_to={pad_to} must be a multiple of the "
+                         f"lane width {LANE}")
+    x_t, sign = _pack(xp, xm, n_pad)
+    return PackedPoints(x_t=x_t, sign=sign, n1=n1, n2=n2)
+
+
 class Preprocessed(NamedTuple):
     """Output of :func:`preprocess` -- the transformed problem."""
 

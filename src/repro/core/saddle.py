@@ -1,16 +1,24 @@
 """Saddle-SVC (Algorithm 2): stochastic primal--dual coordinate solver for
 HM-Saddle (hard-margin SVM) and nu-Saddle (nu-SVM).
 
-Layout convention: point matrices are stored ROW-major, ``xp[i] = x_i^+``
-(shape (n1, d)).  The paper's column ``X_{.i}`` (point i) is ``xp[i]``,
-and the sampled coordinate row ``X_{i*,.}`` is ``xp[:, i*]``.
+Layout convention: the USER-facing point matrices are row-major,
+``xp[i] = x_i^+`` (shape (n1, d)) -- the paper's column ``X_{.i}``
+(point i) is ``xp[i]``.  The SOLVER, however, runs on the packed +-
+layout of :func:`repro.core.preprocess.pack_points`: both classes in
+one lane-padded point set with a +-1 ``sign`` vector, stored as the
+COLUMN-major mirror ``x_t`` of shape (d, n_pad) so the sampled
+coordinate row ``X_{i*,.}`` is the CONTIGUOUS row ``x_t[i*]`` rather
+than a strided column of a row-major matrix.  ``solve`` packs on entry
+and unpacks the final state back into this module's per-class
+:class:`SaddleState`, so the packed layout never leaks to callers.
 
-The actual iteration lives in :mod:`repro.core.engine` -- ONE fused step
-shared by this serial front end, the distributed solver
-(:mod:`repro.core.distributed`), and the Pallas-kernel backend
-(``backend="pallas"`` / ``use_kernels=True``).  This module keeps the
-paper-facing API: parameter formulas (Algorithm 1 line 4), state init,
-the objective/saddle-gap diagnostics, and :func:`solve`.
+The actual iteration lives in :mod:`repro.core.engine` -- ONE fused
+single-sweep step (``engine.step_packed``) shared by this serial front
+end, the distributed solver (:mod:`repro.core.distributed`), and the
+Pallas-kernel backend (``backend="pallas"`` / ``use_kernels=True``).
+This module keeps the paper-facing API: parameter formulas (Algorithm 1
+line 4), state init, the objective/saddle-gap diagnostics, and
+:func:`solve`.
 
 Faithfulness notes:
   * With ``block_size=1`` this is exactly Algorithm 2: one uniformly
@@ -36,6 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine
+from repro.core import preprocess as pp
 
 
 class SaddleParams(NamedTuple):
@@ -134,12 +143,13 @@ def saddle_step_kernels(state: SaddleState, key: jax.Array, xp: jax.Array,
 def run_chunk(state: SaddleState, key: jax.Array, xp: jax.Array,
               xm: jax.Array, params: SaddleParams, num_steps: int,
               use_kernels: bool = False) -> SaddleState:
-    """Run exactly ``num_steps`` iterations under jit.
+    """Run exactly ``num_steps`` REFERENCE (unpacked) iterations under
+    jit.
 
-    Compatibility entry point: compiles per distinct ``num_steps``
-    (it is static here).  Chunked solves should use
-    :func:`engine.run_chunk`, whose dynamic trip count compiles once
-    for all chunk lengths (see :func:`solve`).
+    Compatibility entry point: compiles per distinct ``num_steps`` (it
+    is static here) and runs the unpacked oracle step.  Solves should
+    use :func:`solve`, which runs the packed single-sweep engine with a
+    dynamic trip count (one compile for all chunk lengths).
     """
     backend = "pallas" if use_kernels else "jnp"
     state, _ = engine.chunk_body(state, key, xp, xm, params, num_steps,
@@ -181,6 +191,13 @@ def _capped_min(scores: jax.Array, nu: float) -> jax.Array:
     return jnp.dot(s, weights)
 
 
+def unpack_state(pstate: engine.PackedState, n1: int,
+                 n2: int) -> SaddleState:
+    """Slice a packed solver state back into the per-class view (see
+    engine.unpack_state for the slot layout)."""
+    return engine.unpack_state(pstate, n1, n2, SaddleState)
+
+
 class SolveResult(NamedTuple):
     state: SaddleState
     history: list            # [(iteration, objective)]
@@ -211,15 +228,18 @@ def solve(xp: jax.Array, xm: jax.Array, *, eps: float = 1e-3,
     if num_iters is None:
         num_iters = default_iterations(d, eps, beta, n1 + n2)
     num_iters = max(1, num_iters // block_size)
-    state = init_state(n1, n2, d, xp, xm)
     chunk = min(record_every or num_iters, num_iters)
     backend = "pallas" if use_kernels else "jnp"
-    xp_j, xm_j = jnp.asarray(xp), jnp.asarray(xm)
+
+    pts = pp.pack_points(xp, xm)
+    pstate = engine.init_packed_state(pts.sign, n1, n2, d)
 
     def run(st, sub, ns):
-        return engine.run_chunk(st, sub, xp_j, xm_j, ns, params=params,
-                                chunk_steps=chunk, backend=backend)
+        return engine.run_chunk_packed(st, sub, pts.x_t, pts.sign, ns,
+                                       params=params, chunk_steps=chunk,
+                                       backend=backend)
 
-    state, history = engine.drive(state, jax.random.key(seed),
-                                  num_iters, chunk, run)
-    return SolveResult(state=state, history=history)
+    pstate, history = engine.drive(pstate, jax.random.key(seed),
+                                   num_iters, chunk, run)
+    return SolveResult(state=unpack_state(pstate, n1, n2),
+                       history=history)

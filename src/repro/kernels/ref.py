@@ -38,3 +38,41 @@ def mwu_update_ref(cols: jax.Array, log_lam: jax.Array, u: jax.Array,
     c = 1.0 / (gamma + d_eff / tau)
     log_new = c * ((d_eff / tau) * log_lam - v)
     return log_new, u + dv
+
+
+NEG = -1e30
+
+
+def momentum_dot_packed_ref(x_t: jax.Array, idx: jax.Array,
+                            log_lam: jax.Array, log_prev: jax.Array,
+                            sign: jax.Array,
+                            theta: jax.Array | float) -> jax.Array:
+    """Signed single-sweep momentum dot over the packed operand:
+    delta (b,) = sum_i sign_i (lam_i + theta (lam_i - lam_prev_i))
+                 x_t[idx, i]."""
+    lam = jnp.exp(log_lam)
+    lam_prev = jnp.exp(log_prev)
+    mom = sign * (lam + theta * (lam - lam_prev))
+    return jnp.take(x_t, idx, axis=0) @ mom
+
+
+def mwu_update_packed_ref(x_t: jax.Array, idx: jax.Array,
+                          log_lam: jax.Array, u: jax.Array, dw: jax.Array,
+                          sign: jax.Array, gamma: jax.Array | float,
+                          tau: jax.Array | float,
+                          d_eff: jax.Array | float):
+    """Packed single-sweep dual update for both classes.  Returns
+    (log_new UNNORMALIZED, u_new, m_p, s_p, m_m, s_m) where the
+    per-class logsumexp is m + log(s), masked by the sign vector
+    (padding slots, sign == 0, belong to neither class)."""
+    dv = dw @ jnp.take(x_t, idx, axis=0)
+    v = sign * (u + d_eff * dv)
+    c = 1.0 / (gamma + d_eff / tau)
+    log_new = c * ((d_eff / tau) * log_lam - v)
+    is_p = sign > 0
+    is_m = sign < 0
+    m_p = jnp.max(jnp.where(is_p, log_new, NEG))
+    m_m = jnp.max(jnp.where(is_m, log_new, NEG))
+    s_p = jnp.sum(jnp.where(is_p, jnp.exp(log_new - m_p), 0.0))
+    s_m = jnp.sum(jnp.where(is_m, jnp.exp(log_new - m_m), 0.0))
+    return log_new, u + dv, m_p, s_p, m_m, s_m

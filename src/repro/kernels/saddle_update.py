@@ -1,31 +1,48 @@
 """Pallas TPU kernels for the Saddle-SVC per-iteration hot loop.
 
 Theorem 6's O(n)-per-iteration bound comes from two passes over the n
-points; these kernels fuse each pass into a single VMEM-resident sweep:
+points.  The PACKED kernels (``momentum_dot_packed``/``mwu_update_packed``
+-- the ones the single-sweep engine launches, 2 launches per step) run
+each pass ONCE over both classes: the operand is the packed layout of
+:func:`repro.core.preprocess.pack_points` -- one lane-padded point set
+with a +-1 ``sign`` vector -- and the sampled coordinate block is
+gathered INSIDE the kernel from the raw column-major mirror ``x_t``
+(d, n_pad) via scalar-prefetched block indices
+(``pltpu.PrefetchScalarGridSpec``): grid dimension j walks the b block
+coordinates, and the BlockSpec index map ``(i, j, idx) -> (idx[j], i)``
+DMAs one CONTIGUOUS (1, tile) row slice per step.  No (n, B) ``cols``
+intermediate is ever materialized.
 
-  * ``momentum_dot``  (lines 2-3 of Algorithm 2):
-        delta = cols^T (lam + theta (lam - lam_prev))
-    one read of (cols, log_lam, log_lam_prev) per tile; emits per-tile
-    partial sums that the host-side wrapper reduces.
+  * ``momentum_dot_packed``  (lines 2-3 of Algorithm 2, both classes):
+        delta = sum_i sign_i (lam_i + theta (lam_i - lam_prev_i)) x_t[idx, i]
+    The sign folds the paper's delta+ - delta- difference into one sweep;
+    the signed momentum weights are computed once per tile (at j == 0)
+    into VMEM scratch and reused for all b block rows.
 
-  * ``mwu_update``    (lines 5-6 + the incremental u maintenance):
-        u_new    = u + cols @ dw
-        log_new  = c ((d_eff/tau) log_lam - sign (u + d_eff (cols @ dw)))
-    plus per-tile (max, sum-exp) partials so the simplex normalizer
-    (one logsumexp) is computed without a second pass over HBM.
+  * ``mwu_update_packed``    (lines 5-6 + incremental u, both classes):
+        dv accumulates rank-1 over the j grid dimension in VMEM scratch;
+        at j == b-1 the tile emits u_new, the unnormalized log weights,
+        and PER-CLASS (max, sum-exp) normalizer partials -- the two
+        simplex logsumexps come out of the same sweep, masked by sign.
 
-Both kernels take cols of shape (n, B): B = 1 is the paper-faithful
-single-coordinate mode; B = 128 is the beyond-paper lane-aligned block
-mode where the inner product becomes an MXU matvec.
+The unpacked per-class kernels (``momentum_dot``/``mwu_update``, 4
+launches per step over materialized (n, B) cols) are retained as the
+reference/legacy path the packed engine is parity-tested against.
+
+B = 1 is the paper-faithful single-coordinate mode; B = 128 is the
+beyond-paper lane-aligned block mode where the inner product becomes an
+MXU matvec.
 """
 
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG = -1e30
 
@@ -140,3 +157,155 @@ def mwu_update(cols: jax.Array, log_lam: jax.Array, u: jax.Array,
     if not normalize:
         return log_new[:n], u_new[:n], m, s
     return (log_new - (m + jnp.log(s)))[:n], u_new[:n]
+
+
+# --------------------------------------------------------------------------
+# Packed single-sweep kernels (2 launches per engine step)
+# --------------------------------------------------------------------------
+
+def _packed_tile(n_pad: int, tile: int) -> int:
+    """Largest power-of-two tile <= ``tile`` dividing the lane-padded
+    point count, so the kernels never re-pad the packed operand.
+    128 is the TPU lane width (preprocess.LANE); a non-aligned length
+    would silently degrade to tiny tiles, so reject it."""
+    if n_pad % 128:
+        raise ValueError(
+            f"packed length {n_pad} must be lane-aligned (multiple of "
+            "128); use preprocess.pack_points / packed_length")
+    return math.gcd(n_pad, tile)
+
+
+def _momentum_dot_packed_kernel(idx_ref, x_row_ref, log_lam_ref,
+                                log_prev_ref, sign_ref, theta_ref,
+                                part_ref, mom_ref):
+    del idx_ref  # consumed by the BlockSpec index maps
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():                       # signed momentum weights, once per tile
+        lam = jnp.exp(log_lam_ref[...])
+        lam_prev = jnp.exp(log_prev_ref[...])
+        mom_ref[...] = sign_ref[...] * (
+            lam + theta_ref[0] * (lam - lam_prev))
+
+    part_ref[0, 0] = jnp.sum(x_row_ref[0, :] * mom_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def momentum_dot_packed(x_t: jax.Array, idx: jax.Array, log_lam: jax.Array,
+                        log_prev: jax.Array, sign: jax.Array,
+                        theta: jax.Array, *, tile: int = 1024,
+                        interpret: bool = True) -> jax.Array:
+    """delta (b,) = sum_i sign_i mom_i x_t[idx, i] -- lines 2-3 of
+    Algorithm 2 for BOTH classes in one sweep, gathering the coordinate
+    block from the raw column-major mirror inside the kernel."""
+    d, n_pad = x_t.shape
+    b = idx.shape[0]
+    tile = _packed_tile(n_pad, tile)
+    grid = (n_pad // tile, b)
+    theta = jnp.asarray(theta, x_t.dtype).reshape(1)
+    parts = pl.pallas_call(
+        _momentum_dot_packed_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, tile), lambda i, j, idx: (idx[j], i)),
+                pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
+                pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
+                pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
+                pl.BlockSpec((1,), lambda i, j, idx: (0,)),
+            ],
+            out_specs=pl.BlockSpec((1, 1), lambda i, j, idx: (i, j)),
+            scratch_shapes=[pltpu.VMEM((tile,), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((grid[0], b), x_t.dtype),
+        interpret=interpret,
+    )(idx, x_t, log_lam, log_prev, sign, theta)
+    return parts.sum(axis=0)
+
+
+def _mwu_packed_kernel(idx_ref, x_row_ref, dw_ref, log_lam_ref, u_ref,
+                       sign_ref, scal_ref, log_new_ref, u_new_ref,
+                       part_ref, dv_ref):
+    del idx_ref
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _():
+        dv_ref[...] = jnp.zeros_like(dv_ref)
+
+    dv_ref[...] += x_row_ref[0, :] * dw_ref[j]   # rank-1 accumulate
+
+    @pl.when(j == nb - 1)
+    def _():
+        gamma, tau, d_eff = scal_ref[0], scal_ref[1], scal_ref[2]
+        sign = sign_ref[...]
+        dv = dv_ref[...]
+        u = u_ref[...]
+        v = sign * (u + d_eff * dv)
+        c = 1.0 / (gamma + d_eff / tau)
+        log_new = c * ((d_eff / tau) * log_lam_ref[...] - v)
+        u_new_ref[...] = u + dv
+        log_new_ref[...] = log_new
+        # per-class (max, sumexp) normalizer partials in the same sweep;
+        # the sum is masked (not filled with NEG) so an all-padding /
+        # single-class tile contributes (NEG, 0) instead of (NEG, inf)
+        is_p = sign > 0
+        is_m = sign < 0
+        m_p = jnp.max(jnp.where(is_p, log_new, NEG))
+        m_m = jnp.max(jnp.where(is_m, log_new, NEG))
+        s_p = jnp.sum(jnp.where(is_p, jnp.exp(log_new - m_p), 0.0))
+        s_m = jnp.sum(jnp.where(is_m, jnp.exp(log_new - m_m), 0.0))
+        part_ref[0, :] = jnp.stack([m_p, s_p, m_m, s_m])
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def mwu_update_packed(x_t: jax.Array, idx: jax.Array, log_lam: jax.Array,
+                      u: jax.Array, dw: jax.Array, sign: jax.Array,
+                      gamma: jax.Array, tau: jax.Array, d_eff: jax.Array,
+                      *, tile: int = 1024, interpret: bool = True):
+    """Fused packed dual update (lines 5-6 + incremental u for BOTH
+    classes).  Returns (log_new_unnormalized, u_new, m_p, s_p, m_m, s_m)
+    with per-class lse = m + log(s); the caller combines the partials
+    across clients (distributed rounds 2-3) and normalizes per class."""
+    d, n_pad = x_t.shape
+    b = idx.shape[0]
+    tile = _packed_tile(n_pad, tile)
+    grid = (n_pad // tile, b)
+    scal = jnp.stack([jnp.asarray(s, x_t.dtype)
+                      for s in (gamma, tau, d_eff)])
+    log_new, u_new, parts = pl.pallas_call(
+        _mwu_packed_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, tile), lambda i, j, idx: (idx[j], i)),
+                pl.BlockSpec((b,), lambda i, j, idx: (0,)),
+                pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
+                pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
+                pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
+                pl.BlockSpec((3,), lambda i, j, idx: (0,)),
+            ],
+            out_specs=[
+                pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
+                pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
+                pl.BlockSpec((1, 4), lambda i, j, idx: (i, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((tile,), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), x_t.dtype),
+            jax.ShapeDtypeStruct((n_pad,), x_t.dtype),
+            jax.ShapeDtypeStruct((grid[0], 4), x_t.dtype),
+        ],
+        interpret=interpret,
+    )(idx, x_t, dw, log_lam, u, sign, scal)
+    # combine per-tile per-class partials into the two global logsumexps
+    m_p = jnp.max(parts[:, 0])
+    s_p = jnp.sum(parts[:, 1] * jnp.exp(parts[:, 0] - m_p))
+    m_m = jnp.max(parts[:, 2])
+    s_m = jnp.sum(parts[:, 3] * jnp.exp(parts[:, 2] - m_m))
+    return log_new, u_new, m_p, s_p, m_m, s_m

@@ -24,6 +24,72 @@ def problem():
 
 # ------------------------------------------------------------ parity
 @pytest.mark.parametrize("nu_frac", [0.0, 0.8])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_packed_matches_reference_serial(problem, backend, nu_frac):
+    """The packed single-sweep step must reproduce the unpacked
+    reference engine (same keys, same sampler): serial x jnp/pallas x
+    nu=0/nu>0."""
+    import jax.numpy as jnp
+    xp, xm = problem
+    n1, n2 = xp.shape[0], xm.shape[0]
+    nu = nu_frac and 1.0 / (nu_frac * n1)
+    iters = 80
+    params = saddle.make_params(n1 + n2, xp.shape[1], 1e-3, 0.1, nu=nu)
+    xp_j, xm_j = jnp.asarray(xp), jnp.asarray(xm)
+    # drive() splits one key per chunk off key(seed); replicate it for
+    # the reference so both paths see identical step keys
+    key = jax.random.split(jax.random.key(0))[1]
+
+    ref = saddle.init_state(n1, n2, xp.shape[1], xp, xm)
+    ref, _ = engine.run_chunk(ref, key, xp_j, xm_j, iters, params=params,
+                              chunk_steps=iters, backend=backend)
+
+    res = saddle.solve(xp, xm, nu=nu, num_iters=iters,
+                       use_kernels=(backend == "pallas"))
+    got = res.state
+    np.testing.assert_allclose(np.asarray(got.w), np.asarray(ref.w),
+                               atol=1e-5)
+    for a, b in [(got.log_eta, ref.log_eta), (got.log_xi, ref.log_xi)]:
+        np.testing.assert_allclose(np.exp(np.asarray(a)),
+                                   np.exp(np.asarray(b)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got.u_p), np.asarray(ref.u_p),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got.u_m), np.asarray(ref.u_m),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("nu_frac", [0.0, 0.8])
+def test_packed_matches_reference_distributed(problem, nu_frac):
+    """Packed distributed (vmap sim) vs the REFERENCE unpacked
+    distributed chunk, k=5 with round-robin padding active."""
+    xp, xm = problem
+    n1, n2 = xp.shape[0], xm.shape[0]
+    nu = nu_frac and 1.0 / (nu_frac * n1)
+    iters = 80
+    k = 5
+    params = saddle.make_params(n1 + n2, xp.shape[1], 1e-3, 0.1, nu=nu)
+    key = jax.random.split(jax.random.key(0))[1]
+
+    xp_sh, mask_p = dist.shard_points(xp, k)
+    xm_sh, mask_m = dist.shard_points(xm, k)
+    ref = dist.init_sharded_state(n1, n2, xp.shape[1], mask_p, mask_m)
+    import jax.numpy as jnp
+    ref, _ = dist.run_chunk_sim(ref, key, jnp.asarray(xp_sh),
+                                jnp.asarray(xm_sh), iters, params=params,
+                                chunk_steps=iters)
+
+    res = dist.solve_distributed(xp, xm, k=k, nu=nu, num_iters=iters)
+    np.testing.assert_allclose(np.asarray(res.state.w),
+                               np.asarray(ref.w), atol=1e-5)
+    for a, b in [(res.state.log_eta, ref.log_eta),
+                 (res.state.log_xi, ref.log_xi)]:
+        np.testing.assert_allclose(np.exp(np.asarray(a)),
+                                   np.exp(np.asarray(b)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(res.state.u_p),
+                               np.asarray(ref.u_p), atol=1e-5)
+
+
+@pytest.mark.parametrize("nu_frac", [0.0, 0.8])
 def test_serial_dist_kernel_parity(problem, nu_frac):
     """Serial, distributed-sim, and Pallas-kernel backends are the SAME
     engine step, so their iterates must coincide -- for nu = 0 and
@@ -31,9 +97,9 @@ def test_serial_dist_kernel_parity(problem, nu_frac):
     k=5)."""
     xp, xm = problem
     nu = nu_frac and 1.0 / (nu_frac * xp.shape[0])
-    ser = saddle.solve(xp, xm, nu=nu, num_iters=300)
-    ker = saddle.solve(xp, xm, nu=nu, num_iters=300, use_kernels=True)
-    d5 = dist.solve_distributed(xp, xm, k=5, nu=nu, num_iters=300)
+    ser = saddle.solve(xp, xm, nu=nu, num_iters=200)
+    ker = saddle.solve(xp, xm, nu=nu, num_iters=200, use_kernels=True)
+    d5 = dist.solve_distributed(xp, xm, k=5, nu=nu, num_iters=200)
     w = np.asarray(ser.state.w)
     np.testing.assert_allclose(w, np.asarray(ker.state.w), atol=1e-5)
     np.testing.assert_allclose(w, np.asarray(d5.state.w[0]), atol=1e-5)
@@ -58,10 +124,65 @@ def test_sample_block_without_replacement():
     w.at[idx].set last-write-wins while cols @ dw double-counts the
     column in u (the seed bug)."""
     d, b = 32, 8
-    for seed in range(50):
-        idx = np.asarray(engine.sample_block(jax.random.key(seed), d, b))
-        assert len(np.unique(idx)) == b
-        assert idx.min() >= 0 and idx.max() < d
+    keys = jax.random.split(jax.random.key(0), 50)
+    idx = np.asarray(jax.vmap(
+        lambda k: engine.sample_block(k, d, b))(keys))
+    for row in idx:
+        assert len(np.unique(row)) == b
+        assert row.min() >= 0 and row.max() < d
+
+
+def test_sample_block_distribution_equivalence():
+    """The partial Fisher--Yates sampler must match the uniform
+    without-replacement distribution (what the old full-permutation
+    sampler drew): marginal inclusion b/d per coordinate, pairwise
+    inclusion b(b-1)/(d(d-1)), and all ordered b-tuples distinct."""
+    d, b, trials = 8, 3, 6000
+    keys = jax.random.split(jax.random.key(42), trials)
+    idx = np.asarray(jax.vmap(
+        lambda k: engine.sample_block(k, d, b))(keys))        # (T, b)
+    assert idx.shape == (trials, b)
+    # marginal inclusion probability: every coordinate in b/d of draws
+    inc = np.zeros(d)
+    for c in range(d):
+        inc[c] = (idx == c).any(axis=1).mean()
+    p1 = b / d
+    se1 = np.sqrt(p1 * (1 - p1) / trials)
+    np.testing.assert_allclose(inc, p1, atol=6 * se1)
+    # pairwise inclusion: P(i and j both drawn) = b(b-1)/(d(d-1))
+    p2 = b * (b - 1) / (d * (d - 1))
+    se2 = np.sqrt(p2 * (1 - p2) / trials)
+    for i, j in [(0, 1), (2, 5), (3, 7), (6, 4)]:
+        pij = ((idx == i).any(axis=1) & (idx == j).any(axis=1)).mean()
+        assert abs(pij - p2) < 6 * se2, (i, j, pij, p2)
+    # position uniformity: each SLOT of the draw is marginally uniform
+    # (Fisher-Yates guarantees exchangeability the prefix-slice of a
+    # sorted top-k would not)
+    for slot in range(b):
+        freq = np.bincount(idx[:, slot], minlength=d) / trials
+        se = np.sqrt((1 / d) * (1 - 1 / d) / trials)
+        np.testing.assert_allclose(freq, 1 / d, atol=6 * se)
+
+
+@pytest.mark.parametrize("nu_frac", [0.0, 0.8])
+def test_distributed_kernels_parity(problem, nu_frac):
+    """ROADMAP gap: distributed + Pallas composition.  The packed
+    kernels run under the vmap client simulation (interpret mode) and
+    must match the jnp distributed path exactly -- nu=0 and nu>0, with
+    round-robin padding active."""
+    xp, xm = problem
+    nu = nu_frac and 1.0 / (nu_frac * xp.shape[0])
+    dj = dist.solve_distributed(xp, xm, k=5, nu=nu, num_iters=60)
+    dk = dist.solve_distributed(xp, xm, k=5, nu=nu, num_iters=60,
+                                use_kernels=True)
+    np.testing.assert_allclose(np.asarray(dj.state.w),
+                               np.asarray(dk.state.w), atol=1e-5)
+    eta_j, xi_j = dist.gather_duals(dj.state, xp.shape[0], xm.shape[0], 5)
+    eta_k, xi_k = dist.gather_duals(dk.state, xp.shape[0], xm.shape[0], 5)
+    np.testing.assert_allclose(eta_j, eta_k, atol=1e-5)
+    np.testing.assert_allclose(xi_j, xi_k, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dj.state.u_p),
+                               np.asarray(dk.state.u_p), atol=1e-5)
 
 
 @pytest.mark.parametrize("use_kernels", [False, True])
@@ -108,7 +229,7 @@ def test_run_chunk_compiles_once_with_partial_final_chunk(problem):
     res = saddle.solve(xp, xm, num_iters=250, record_every=97)
     delta = {k: v - snap.get(k, 0) for k, v in engine.trace_counts.items()
              if v != snap.get(k, 0)}
-    assert delta == {(None, "jnp", 97): 1}, delta
+    assert delta == {("packed", None, "jnp", 97): 1}, delta
     assert [h[0] for h in res.history] == [97, 194, 250]
     # the partial chunk really ran only 56 steps
     assert int(res.state.t) == 250

@@ -55,6 +55,70 @@ def test_mwu_update_sweep(n, b, sign):
                                atol=1e-5)
 
 
+def _packed_problem(rng, n_pad, n1, n2, d, b):
+    """Packed operand with lane padding + per-class log weights."""
+    NEG = -1e30
+    x = rng.normal(size=(n_pad, d)).astype(np.float32)
+    x[n1 + n2:] = 0.0
+    sign = np.zeros(n_pad, np.float32)
+    sign[:n1] = 1.0
+    sign[n1:n1 + n2] = -1.0
+    log_lam = np.full(n_pad, NEG, np.float32)
+    log_lam[:n1] = -np.log(n1) + 0.1 * rng.normal(size=n1)
+    log_lam[n1:n1 + n2] = -np.log(n2) + 0.1 * rng.normal(size=n2)
+    idx = rng.choice(d, b, replace=False).astype(np.int32)
+    return (jnp.asarray(np.ascontiguousarray(x.T)), jnp.asarray(sign),
+            jnp.asarray(log_lam), jnp.asarray(idx))
+
+
+@pytest.mark.parametrize("n_pad,n1,n2,b", [(128, 40, 50, 1),
+                                           (1024, 500, 490, 8),
+                                           (2176, 1000, 1100, 128)])
+def test_momentum_dot_packed_sweep(n_pad, n1, n2, b):
+    """Packed signed momentum sweep (in-kernel gather from the
+    column-major mirror) vs the jnp oracle, with lane padding active."""
+    rng = np.random.default_rng(n_pad + b)
+    d = 256
+    x_t, sign, ll, idx = _packed_problem(rng, n_pad, n1, n2, d, b)
+    lp = ll + jnp.asarray(0.05 * rng.normal(size=n_pad), jnp.float32) * (
+        sign != 0)
+    got = ops.momentum_dot_packed(x_t, idx, ll, lp, sign, 0.95)
+    want = ref.momentum_dot_packed_ref(x_t, idx, ll, lp, sign, 0.95)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("n_pad,n1,n2,b", [(128, 40, 50, 1),
+                                           (1024, 500, 490, 8),
+                                           (2176, 1000, 1100, 128)])
+def test_mwu_update_packed_sweep(n_pad, n1, n2, b):
+    """Packed fused dual update vs the jnp oracle: log weights, u, and
+    BOTH per-class logsumexp normalizers from one sweep."""
+    rng = np.random.default_rng(n_pad * 3 + b)
+    d = 256
+    x_t, sign, ll, idx = _packed_problem(rng, n_pad, n1, n2, d, b)
+    u = jnp.asarray(rng.normal(size=n_pad).astype(np.float32) * 0.1)
+    dw = jnp.asarray(rng.normal(size=b).astype(np.float32) * 0.01)
+    gamma, tau, d_eff = 1e-3, 40.0, float(d)
+    got = ops.mwu_update_packed(x_t, idx, ll, u, dw, sign, gamma=gamma,
+                                tau=tau, d_eff=d_eff)
+    want = ref.mwu_update_packed_ref(x_t, idx, ll, u, dw, sign, gamma,
+                                     tau, d_eff)
+    # real slots of log_new; padding slots only need to stay hugely
+    # negative (their magnitude is ~1e30 where float error is ~1e24)
+    n = n1 + n2
+    for g, w, tol in [(got[0][:n], want[0][:n], 1e-4),
+                      (got[1], want[1], 1e-5)]:
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=tol)
+    assert np.asarray(got[0][n:] < -1e20).all()
+    # per-class normalizers agree as full logsumexps
+    for (m_g, s_g), (m_w, s_w) in [((got[2], got[3]), (want[2], want[3])),
+                                   ((got[4], got[5]), (want[4], want[5]))]:
+        lse_g = float(m_g) + np.log(float(s_g))
+        lse_w = float(m_w) + np.log(float(s_w))
+        np.testing.assert_allclose(lse_g, lse_w, atol=1e-4)
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(2, 300), st.sampled_from([1, 2, 16]),
        st.integers(0, 9999))

@@ -72,6 +72,128 @@ def test_projection_preserves_order():
     assert np.all(np.diff(sorted_out) >= -1e-6)
 
 
+# ------------------------------------- sort-free bisection == Rule 2 == Rule 3
+@pytest.mark.parametrize("n,nu_scale", [(8, 2.0), (32, 1.5), (100, 5.0),
+                                        (257, 1.2)])
+def test_bisect_equals_sorted_and_loop(n, nu_scale):
+    rng = np.random.default_rng(n + 1)
+    eta = _rand_simplex(rng, n)
+    nu = nu_scale / n
+    pb = np.asarray(proj.capped_simplex_project_bisect(
+        jnp.asarray(eta, jnp.float32), nu))
+    p2 = np.asarray(proj.capped_simplex_project_sorted(
+        jnp.asarray(eta, jnp.float32), nu))
+    p3 = np.asarray(proj.capped_simplex_project_loop(
+        jnp.asarray(eta, jnp.float32), nu))
+    np.testing.assert_allclose(pb, p2, atol=2e-5)
+    np.testing.assert_allclose(pb, p3, atol=2e-5)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(4, 200), st.floats(1.05, 8.0), st.integers(0, 10_000))
+def test_bisect_property_equivalence(n, nu_scale, seed):
+    """Property: the sort-free bisection, the sorted Rule 2, and the
+    iterative Rule 3 agree on random capped-simplex inputs, and the
+    output lies in the capped simplex."""
+    rng = np.random.default_rng(seed)
+    eta = _rand_simplex(rng, n)
+    nu = nu_scale / n
+    pb = np.asarray(proj.capped_simplex_project_bisect(
+        jnp.asarray(eta, jnp.float32), nu))
+    p2 = np.asarray(proj.capped_simplex_project_sorted(
+        jnp.asarray(eta, jnp.float32), nu))
+    p3 = np.asarray(proj.capped_simplex_project_loop(
+        jnp.asarray(eta, jnp.float32), nu))
+    np.testing.assert_allclose(pb, p2, atol=2e-5)
+    np.testing.assert_allclose(pb, p3, atol=2e-5)
+    assert abs(pb.sum() - 1.0) < 1e-4
+    assert pb.max() <= nu + 1e-5 and pb.min() >= -1e-7
+
+
+def test_bisect_all_below_cap_is_identity():
+    """Feasible input (max <= nu) must come back unchanged -- exactly,
+    not within bisection tolerance."""
+    rng = np.random.default_rng(7)
+    n = 64
+    v = rng.uniform(0.5, 1.0, size=n)
+    eta = (v / v.sum()).astype(np.float32)           # max well below 2/n
+    out = np.asarray(proj.capped_simplex_project_bisect(
+        jnp.asarray(eta), 2.0 / n))
+    np.testing.assert_array_equal(out, eta)
+
+
+@pytest.mark.parametrize("delta", [1e-1, 1e-3, 1e-6, 0.0])
+def test_bisect_mass_concentrated(delta):
+    """Nearly all mass on one entry: the cap set is a single entry and
+    the scale factor is huge (the stress case for the bisection
+    bracket).  delta=0 is the degenerate boundary input where even the
+    oracles return sum nu < 1 (KL projection cannot move off zeros).
+
+    The loop oracle (Rule 3) is the ground truth here: past
+    delta ~ 1e-3 the SORTED rule's Omega = prefix - s suffers f32
+    catastrophic cancellation (prefix ~ 1.0, s ~ 1 - delta) and drifts
+    by percent while the bisection's directly-summed Omega stays exact,
+    so the sorted comparison is gated to the mild cases."""
+    n = 50
+    eta = np.full(n, delta / (n - 1), np.float32)
+    eta[0] = 1.0 - delta
+    nu = 2.0 / n
+    pb = np.asarray(proj.capped_simplex_project_bisect(
+        jnp.asarray(eta), nu))
+    p3 = np.asarray(proj.capped_simplex_project_loop(
+        jnp.asarray(eta), nu))
+    np.testing.assert_allclose(pb, p3, atol=2e-5)
+    if delta == 0.0 or delta >= 1e-3:
+        p2 = np.asarray(proj.capped_simplex_project_sorted(
+            jnp.asarray(eta), nu))
+        np.testing.assert_allclose(pb, p2, atol=2e-5)
+    assert abs(pb.sum() - (1.0 if delta else nu)) < 1e-5
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(4, 60), st.integers(0, 10_000))
+def test_bisect_idempotent(n, seed):
+    rng = np.random.default_rng(seed)
+    eta = _rand_simplex(rng, n)
+    nu = 2.0 / n
+    once = proj.capped_simplex_project_bisect(
+        jnp.asarray(eta, jnp.float32), nu)
+    twice = proj.capped_simplex_project_bisect(once, nu)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice),
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("n1,n2,nu_scale", [(40, 50, 1.5), (100, 70, 3.0)])
+def test_engine_packed_projection_matches_oracles(n1, n2, nu_scale):
+    """The two-class masked variant the solver hot loop ACTUALLY runs
+    (engine._capped_project_packed) must match the per-class oracles,
+    with lane padding slots (sign 0, log-weight NEG_INF) present and
+    preserved."""
+    from repro.core import engine
+    rng = np.random.default_rng(n1 * n2)
+    n_pad = 256
+    sign = np.zeros(n_pad, np.float32)
+    sign[:n1] = 1.0
+    sign[n1:n1 + n2] = -1.0
+    eta = _rand_simplex(rng, n1)
+    xi = _rand_simplex(rng, n2)
+    log_lam = np.full(n_pad, engine.NEG_INF, np.float32)
+    log_lam[:n1] = np.log(eta)
+    log_lam[n1:n1 + n2] = np.log(xi)
+    nu = nu_scale / min(n1, n2)
+    out = np.asarray(engine._capped_project_packed(
+        jnp.asarray(log_lam), jnp.asarray(sign), nu, None))
+    for sl, v in [(slice(0, n1), eta), (slice(n1, n1 + n2), xi)]:
+        want = np.asarray(proj.capped_simplex_project_loop(
+            jnp.asarray(v, jnp.float32), nu))
+        np.testing.assert_allclose(np.exp(out[sl]), want, atol=2e-5)
+        want_b = np.asarray(proj.capped_simplex_project_bisect(
+            jnp.asarray(v, jnp.float32), nu))
+        np.testing.assert_allclose(np.exp(out[sl]), want_b, atol=2e-5)
+    # padding slots keep their NEG_INF marker exactly
+    assert (out[n1 + n2:] == engine.NEG_INF).all()
+
+
 # ------------------------------------------------ entropy prox vs argmin
 def test_entropy_prox_is_argmin():
     """Lemma 10: the closed form solves the prox problem (check by
