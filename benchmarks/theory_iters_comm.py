@@ -1,22 +1,99 @@
-"""Theorems 6 + 8 empirically: iterations-to-tolerance scale like
-sqrt(d / (eps * beta)) in d, and communication is O(k) per iteration
-independent of n, d."""
+"""Theorems 6 + 8 empirically.
+
+Theorem 8 (the comm part, quick mode -- this is what writes
+``BENCH_comm.json`` from ``scripts/ci.sh fast``): MEASURED post-SPMD
+per-iteration collective counts of the sharded packed step, for
+k in {2, 8, 32} and both HM-Saddle and nu-Saddle, against the analytic
+``CommModel`` -- the measurement is the real compiled HLO (via
+``repro.utils.comm_audit``, in a subprocess with the host device count
+forced to max k), so the O(k) scalar bound is a tracked metric, not a
+docstring claim.  Every record emits measured count/bytes, the model
+prediction, and the match bit; any mismatch fails the suite.
+
+Theorem 6 (full mode only -- it solves QPs and 30k-iteration saddle
+runs): iterations-to-tolerance scale like sqrt(d / (eps * beta)) in d.
+
+Runnable standalone like ``benchmarks/run.py``::
+
+    python -m benchmarks.theory_iters_comm --json BENCH_comm.json
+    python -m benchmarks.theory_iters_comm --full
+"""
 
 from __future__ import annotations
 
-import time
+import argparse
 
-import jax
 import numpy as np
 
-from benchmarks.common import emit
-from repro.core import distributed as dist
-from repro.core import preprocess as pp
-from repro.core import saddle
-from repro.data import synthetic
+from benchmarks.common import emit, emit_count, header, write_json
+
+AUDIT_KS = (2, 8, 32)
+AUDIT_N1, AUDIT_N2, AUDIT_D, AUDIT_B = 320, 384, 64, 8
+NU_FRAC = 0.8
+
+
+def _audit_specs() -> list[dict]:
+    specs = []
+    for k in AUDIT_KS:
+        for nu_frac in (0.0, NU_FRAC):
+            nu = 1.0 / (nu_frac * AUDIT_N1) if nu_frac else 0.0
+            specs.append({"k": k, "n1": AUDIT_N1, "n2": AUDIT_N2,
+                          "d": AUDIT_D, "nu": nu,
+                          "block_size": AUDIT_B,
+                          # one full-chunk (production runner) audit
+                          # per nu regime at the middle k
+                          "runner": k == AUDIT_KS[1],
+                          "chunk_steps": 8})
+    return specs
+
+
+def run_comm(quick: bool = True) -> None:
+    """Measured-vs-CommModel collective counts (Theorem 8)."""
+    from repro.utils import comm_audit
+
+    del quick  # same matrix in both modes: one subprocess, tiny programs
+    records = comm_audit.collect_audits(_audit_specs())
+    mismatches = []
+    for rec in records:
+        tag = (f"comm/measured_k{rec['k']}_"
+               f"{'nu' if rec['nu'] else 'hm'}")
+        emit_count(tag, rec["per_iteration_count"],
+                   f"model={rec['model_collectives']};"
+                   f"match={rec['match']};"
+                   f"bytes_per_iter={rec['per_iteration_bytes']};"
+                   f"model_bytes={rec['model_payload_bytes']};"
+                   f"theorem8_scalars={rec['model_scalars']:.0f};"
+                   f"B={rec['block_size']}")
+        if not rec["match"]:
+            mismatches.append(tag)
+        if "runner_match" in rec:
+            emit_count(tag + "_chunk", sum(
+                rec["runner_measured"].values()),
+                f"runner_match={rec['runner_match']};"
+                f"matches_single_step={rec['runner_matches_step']};"
+                f"per_chunk={rec['runner_per_chunk']}")
+            if not (rec["runner_match"] and rec["runner_matches_step"]):
+                mismatches.append(tag + "_chunk")
+    # the model's paper-convention scalar counts, linear in k by
+    # construction -- recorded alongside so the JSON carries both views
+    from repro.core import distributed as dist
+    from repro.core import projections
+    for k in AUDIT_KS:
+        for rounds, nm in ((0.0, "hm"),
+                           (float(projections.BISECT_ROUNDS_SOLVER),
+                            "nu")):
+            c = dist.CommModel(k=k, nu_rounds_per_iter=rounds)
+            emit_count(f"comm/model_scalars_k{k}_{nm}",
+                       c.scalars_per_iteration(),
+                       f"collectives={c.collectives_per_iteration(AUDIT_B)}")
+    if mismatches:
+        raise AssertionError(
+            f"measured collectives != CommModel for {mismatches} -- a "
+            "communication regression in the shard_map hot loop")
 
 
 def _iters_to_tol(XP, XM, opt, tol=1.10, max_iters=30000):
+    from repro.core import saddle
     res = saddle.solve(XP, XM, eps=1e-3, beta=0.1, num_iters=max_iters,
                        record_every=500)
     for it, obj in res.history:
@@ -25,10 +102,16 @@ def _iters_to_tol(XP, XM, opt, tol=1.10, max_iters=30000):
     return max_iters
 
 
-def run(quick: bool = True) -> None:
+def run_iters() -> None:
+    """Iteration-count scaling in d (Theorem 6) -- the slow part."""
+    import jax
+
     from repro.baselines import qp_nusvm
+    from repro.core import preprocess as pp
+    from repro.data import synthetic
+
     n = 1500
-    dims = (16, 64, 256) if quick else (16, 64, 256, 1024)
+    dims = (16, 64, 256, 1024)
     iters = []
     for d in dims:
         ds = synthetic.separable(n, d, seed=d)
@@ -45,8 +128,32 @@ def run(quick: bool = True) -> None:
     emit("theory/iter_growth", 0.0,
          f"measured={got:.2f};sqrt_d_prediction={pred:.2f}")
 
-    # communication: scalars per iteration linear in k, flat in n and d
-    for k in (5, 10, 20):
-        c = dist.CommModel(k=k, nu_rounds_per_iter=0)
-        emit(f"theory/comm_k{k}", 0.0,
-             f"scalars_per_iter={c.scalars_per_iteration():.0f}")
+
+def run(quick: bool = True) -> None:
+    run_comm(quick)
+    if not quick:
+        run_iters()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="Theorem 8 communication audit (+ Theorem 6 "
+                    "iteration scaling with --full)")
+    ap.add_argument("--full", action="store_true",
+                    help="also run the slow iteration-scaling study")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write every metric as JSON records "
+                         "(e.g. BENCH_comm.json) for CI tracking")
+    args = ap.parse_args()
+    header()
+    try:
+        run(quick=not args.full)
+    finally:
+        # write the JSON even when the audit assertion fires: the
+        # measured-vs-model records ARE the diagnostic for a mismatch
+        if args.json:
+            write_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

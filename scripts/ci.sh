@@ -25,6 +25,11 @@ case "$tier" in
     # tracked from every fast run.  BENCH_engine.json is gitignored.
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
       python -m benchmarks.run --only engine --json BENCH_engine.json
+    # communication audit (Theorem 8): measured post-SPMD collective
+    # counts vs the CommModel for k in {2,8,32}; fails on mismatch.
+    # BENCH_comm.json is gitignored.
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+      python -m benchmarks.theory_iters_comm --json BENCH_comm.json
     ;;
   full) exec python -m pytest -q "$@" ;;
   *)    echo "usage: scripts/ci.sh [fast|full] [pytest args...]" >&2

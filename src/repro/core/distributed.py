@@ -65,8 +65,22 @@ class ShardedState(NamedTuple):
 
 
 class CommModel(NamedTuple):
-    """Analytic communication accounting for Algorithm 4 (scalar counts,
-    matching the paper's convention of counting numbers exchanged)."""
+    """Analytic communication accounting for Algorithm 4.
+
+    Two views of the same protocol:
+
+    * ``scalars_per_iteration`` -- the PAPER's convention (Theorem 8):
+      numbers exchanged per iteration, counting every client's up/down
+      traffic, O(k).
+    * ``collectives_per_iteration`` / ``collective_multiset`` /
+      ``payload_elements_per_iteration`` -- the IMPLEMENTATION's view:
+      how many collective launches (and of what reduction/shape) one
+      ``engine.step_packed`` must emit per iteration.  This is what
+      ``repro.utils.comm_audit`` checks against the post-SPMD HLO XLA
+      actually compiles, making the O(k) bound a tested invariant: the
+      per-device launch count and payload are independent of n, d and
+      k, so total traffic is exactly (payload) x O(k).
+    """
     k: int
     nu_rounds_per_iter: float   # 0 for HM-Saddle; else BISECT_ROUNDS
 
@@ -88,6 +102,46 @@ class CommModel(NamedTuple):
 
     def total(self, iters: int) -> float:
         return self.scalars_per_iteration() * iters
+
+    def collective_multiset(self, block_size: int = 1) -> dict:
+        """Predicted per-iteration collective launches of the packed
+        step, as a multiset keyed (op, reduce_kind, result_elements) --
+        directly comparable against the post-SPMD HLO (see
+        repro.utils.comm_audit).  Per iteration:
+
+          round 1    momentum psum           add  (B,)
+          rounds 2-3 normalizer pmax + psum  max/add  (2,)
+          round 4    feasibility pmax        max  (2,)
+                     BISECT_ROUNDS psums     add  (2,)  (one per round)
+                     cap-set stats psum      add  (4,)
+        """
+        ms: dict = {}
+
+        def bump(kind, elems, cnt=1):
+            key = ("all-reduce", kind, elems)
+            ms[key] = ms.get(key, 0) + cnt
+
+        bump("add", block_size)          # momentum delta
+        bump("max", 2)                   # normalizer pmax
+        bump("add", 2)                   # normalizer psum
+        if self.nu_rounds_per_iter:
+            bump("max", 2)               # feasibility pmax
+            bump("add", 2, int(self.nu_rounds_per_iter))   # bisection
+            bump("add", 4)               # cap-set |cap| + Omega stats
+        return ms
+
+    def collectives_per_iteration(self, block_size: int = 1) -> int:
+        """Predicted collective LAUNCH count per iteration -- constant
+        in n, d and k (3 for HM-Saddle; 5 + BISECT_ROUNDS for
+        nu-Saddle)."""
+        return sum(self.collective_multiset(block_size).values())
+
+    def payload_elements_per_iteration(self, block_size: int = 1) -> int:
+        """Predicted per-device all-reduce payload elements per
+        iteration: O(B + rounds), independent of n (the O(k*d) bound of
+        Theorem 8 with the momentum round's B <= d elements)."""
+        return sum(elems * cnt for (_, _, elems), cnt
+                   in self.collective_multiset(block_size).items())
 
 
 def dsvc_step(state: ShardedState, key: jax.Array, xp: jax.Array,
@@ -214,18 +268,22 @@ def run_chunk_sim_packed(state: engine.PackedState, key: jax.Array,
                     axis_name=CLIENT_AXIS)(state, x_t, sign)
 
 
-def make_sharded_runner(mesh: jax.sharding.Mesh, axis: str = CLIENT_AXIS,
-                        backend: str = "jnp"):
-    """shard_map runner for a real device mesh: the production path used
-    by the multi-pod dry-run (clients = the mesh 'data' axis), running
-    the packed single-sweep chunk per shard."""
+def sharded_run_fn(mesh: jax.sharding.Mesh, axis=CLIENT_AXIS,
+                   backend: str = "jnp", *, params: SaddleParams,
+                   chunk_steps: int):
+    """UN-jitted shard_map chunk runner over a real device mesh:
+    ``run(state, key, x_t, sign, num_steps) -> (state, obj)``.
+
+    ``axis`` may be a single mesh axis name or a tuple of axis names
+    (the dry-run maps clients onto ALL mesh axes, so a 16x16 pod is
+    k=256 clients); psum/pmax accept either.  Exposed separately from
+    :func:`make_sharded_runner` so the communication audit and the
+    launch specs can AOT-lower the exact production chunk from
+    ShapeDtypeStructs without allocating anything."""
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
-    @functools.partial(jax.jit,
-                       static_argnames=("params", "chunk_steps"),
-                       donate_argnums=(0,))
-    def run(state, key, x_t, sign, num_steps, *, params, chunk_steps):
+    def run(state, key, x_t, sign, num_steps):
         def client_fn(st, x_t_c, sign_c, key_r, ns_r):
             st = jax.tree.map(lambda a: a[0], st)        # drop shard dim
             x_t_c, sign_c = x_t_c[0], sign_c[0]
@@ -239,6 +297,23 @@ def make_sharded_runner(mesh: jax.sharding.Mesh, axis: str = CLIENT_AXIS,
                        in_specs=(spec, spec, spec, P(), P()),
                        out_specs=(spec, spec), check_rep=False)
         return fn(state, x_t, sign, key, jnp.asarray(num_steps, jnp.int32))
+
+    return run
+
+
+def make_sharded_runner(mesh: jax.sharding.Mesh, axis=CLIENT_AXIS,
+                        backend: str = "jnp"):
+    """shard_map runner for a real device mesh: the production path used
+    by the multi-pod dry-run (clients = the mesh 'data' axis), running
+    the packed single-sweep chunk per shard."""
+
+    @functools.partial(jax.jit,
+                       static_argnames=("params", "chunk_steps"),
+                       donate_argnums=(0,))
+    def run(state, key, x_t, sign, num_steps, *, params, chunk_steps):
+        inner = sharded_run_fn(mesh, axis, backend, params=params,
+                               chunk_steps=chunk_steps)
+        return inner(state, key, x_t, sign, num_steps)
 
     return run
 

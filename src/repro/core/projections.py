@@ -126,9 +126,11 @@ def capped_bisect_masked(lam: jax.Array, nu: float, masks: jax.Array, *,
     Projects ``lam`` restricted to each row of ``masks`` (C, n) -- C
     disjoint index sets, each a separate capped simplex -- in ONE
     shared sweep per bisection round.  ``all_sum``/``all_max`` are the
-    (C,)-vector cross-client reduction hooks (identity in serial, one
-    psum/pmax per round of Algorithm 4's round 4 under an axis).
-    Entries outside every mask come back 0.
+    shape-agnostic cross-client reduction hooks (identity in serial;
+    under an axis: one (C,) pmax for feasibility, one (C,) psum per
+    bisection round, and one (2C,) psum for the cap-set stats -- the
+    whole round-4 collective budget of Algorithm 4).  Entries outside
+    every mask come back 0.
 
     Per class: bisect ``log c`` until ``g(c) = sum min(c lam, nu)``
     brackets 1, read off the cap set ``{i : c lam_i >= nu}``, then
@@ -157,10 +159,15 @@ def capped_bisect_masked(lam: jax.Array, nu: float, masks: jax.Array, *,
     # so they are never clamped and scale to 0)
     c_i = jnp.sum(masks * jnp.exp(hi)[:, None], axis=0)
     clamped = c_i * lam >= nu
-    n_cl = all_sum(jnp.sum(jnp.where(masks & clamped[None, :], 1.0, 0.0),
-                           axis=1))
-    omega = all_sum(jnp.sum(jnp.where(masks & ~clamped[None, :], lam, 0.0),
-                            axis=1))
+    # cap-set stats for the exact rescale, combined into ONE (2C,)
+    # all-reduce (|cap| per class, then Omega per class) -- the single
+    # "(4,) cap-set stats psum" of the CommModel's round-4 accounting
+    n_cl_loc = jnp.sum(jnp.where(masks & clamped[None, :], 1.0, 0.0),
+                       axis=1)
+    omega_loc = jnp.sum(jnp.where(masks & ~clamped[None, :], lam, 0.0),
+                        axis=1)
+    stats = all_sum(jnp.concatenate([n_cl_loc, omega_loc]))
+    n_cl, omega = stats[:masks.shape[0]], stats[masks.shape[0]:]
     alpha = (1.0 - nu * n_cl) / jnp.maximum(omega, 1e-30)
     alpha_i = jnp.sum(masks * alpha[:, None], axis=0)
     proj = jnp.where(clamped, nu, lam * alpha_i)

@@ -105,10 +105,80 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     return rec
 
 
+def run_one_saddle(shape_name: str, multi_pod: bool,
+                   verbose: bool = True) -> dict:
+    """Lower + compile the Saddle-DSVC production chunk on the dry-run
+    mesh and audit its collectives against the CommModel (Theorem 8):
+    the record carries measured-vs-predicted per-iteration collective
+    multisets alongside the usual roofline terms."""
+    from repro.utils import comm_audit
+
+    shape = specs_mod.SADDLE_DSVC_SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": specs_mod.SOLVER_ARCH, "shape": shape_name,
+           "mesh": mesh_name, "applicable": True, "reason": "ok"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        fn, args, meta = specs_mod.build_saddle_dsvc_lowerable(mesh, shape)
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        roof = rl.analyze(compiled)
+
+    model = meta["model"]
+    counts = comm_audit.audit_hlo(compiled.as_text(), has_step_loop=True)
+    predicted = model.collective_multiset(meta["block_size"])
+    rec.update({
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": _mem_dict(mem),
+        "hlo_flops_per_device": roof.flops,
+        "hlo_bytes_per_device": roof.hbm_bytes,
+        "collective_bytes_per_device": roof.collective_bytes,
+        "collective_breakdown": roof.collectives.bytes_by_op,
+        "collective_counts": roof.collectives.count_by_op,
+        "comm_audit": {
+            "k": meta["k"], "nu": meta["nu"],
+            "block_size": meta["block_size"],
+            "chunk_steps": meta["chunk_steps"],
+            "measured_per_iteration":
+                comm_audit.multiset_to_json(counts.per_iteration),
+            "predicted_per_iteration":
+                comm_audit.multiset_to_json(predicted),
+            "match": counts.per_iteration == predicted,
+            "per_iteration_count": counts.per_iteration_count,
+            "per_iteration_bytes": counts.per_iteration_bytes,
+            "per_chunk": comm_audit.multiset_to_json(counts.per_chunk),
+            "model_scalars_per_iteration":
+                model.scalars_per_iteration(),
+        },
+    })
+    if not rec["comm_audit"]["match"]:
+        raise RuntimeError(
+            f"saddle-dsvc {shape_name} x {mesh_name}: measured "
+            f"collectives {rec['comm_audit']['measured_per_iteration']} "
+            f"!= CommModel {rec['comm_audit']['predicted_per_iteration']}")
+    if verbose:
+        ca = rec["comm_audit"]
+        print(f"[dryrun] {specs_mod.SOLVER_ARCH} x {shape_name} x "
+              f"{mesh_name}: OK  k={ca['k']}  "
+              f"collectives/iter {ca['per_iteration_count']} "
+              f"(model {model.collectives_per_iteration(meta['block_size'])})"
+              f"  bytes/iter {ca['per_iteration_bytes']}  "
+              f"Theorem8 scalars/iter {ca['model_scalars_per_iteration']:.0f}"
+              f"  (lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description="multi-pod dry-run")
     ap.add_argument("--arch", default=None,
-                    help=f"one of {list_configs()} (default: all assigned)")
+                    help=f"one of {list_configs()} + "
+                         f"'{specs_mod.SOLVER_ARCH}' "
+                         f"(default: all assigned)")
     ap.add_argument("--shape", default=None,
                     help=f"one of {sorted(SHAPES)} (default: all)")
     ap.add_argument("--multi-pod", action="store_true")
@@ -118,14 +188,35 @@ def main() -> None:
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
-    archs = [args.arch] if args.arch else ASSIGNED
-    shapes = [args.shape] if args.shape else list(SHAPES)
+    if args.shape and args.shape not in SHAPES \
+            and args.shape not in specs_mod.SADDLE_DSVC_SHAPES:
+        raise SystemExit(
+            f"unknown --shape {args.shape!r}: LM shapes {sorted(SHAPES)}, "
+            f"solver shapes {sorted(specs_mod.SADDLE_DSVC_SHAPES)}")
+    solver_only = args.arch == specs_mod.SOLVER_ARCH
+    archs = [] if solver_only else ([args.arch] if args.arch else ASSIGNED)
+    # the solver entry has its own shape namespace (point counts, not
+    # token shapes), so a --shape pick routes to exactly one of the two
+    lm_shapes = ([args.shape] if args.shape in SHAPES
+                 else [] if args.shape else list(SHAPES))
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
 
-    combos = [(a, s) for a in archs for s in shapes]
+    combos = [(a, s) for a in archs for s in lm_shapes]
     if not args.arch and not args.shape:
         # the dense->SWA variant that licenses long_500k for gemma
         combos.append(("gemma-7b-swa", "long_500k"))
+
+    # saddle-dsvc joins the sweep by default and via --arch
+    if solver_only or args.arch is None:
+        solver_shapes = (
+            [args.shape] if args.shape in specs_mod.SADDLE_DSVC_SHAPES
+            else ([] if args.shape else
+                  list(specs_mod.SADDLE_DSVC_SHAPES)))
+        combos += [(specs_mod.SOLVER_ARCH, s) for s in solver_shapes]
+    if not combos:
+        raise SystemExit(
+            f"no (arch, shape) combinations: --arch {args.arch!r} does "
+            f"not take --shape {args.shape!r}")
 
     os.makedirs(args.out, exist_ok=True)
     failures = []
@@ -135,7 +226,11 @@ def main() -> None:
                 if args.unroll:
                     tag += "_unrolled"
                 try:
-                    rec = run_one(arch, shape, mp, unroll=args.unroll)
+                    if arch == specs_mod.SOLVER_ARCH:
+                        rec = run_one_saddle(shape, mp)
+                    else:
+                        rec = run_one(arch, shape, mp,
+                                      unroll=args.unroll)
                 except Exception as e:      # noqa: BLE001
                     traceback.print_exc()
                     rec = {"arch": arch, "shape": shape,

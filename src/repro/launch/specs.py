@@ -10,7 +10,8 @@ allocation: every arg is a ShapeDtypeStruct carrying a NamedSharding.
 from __future__ import annotations
 
 import functools
-from typing import Any
+import math
+from typing import Any, NamedTuple as _NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -138,6 +139,61 @@ def input_specs(arch_or_cfg, shape_name: str = "train_4k"):
     cfg = arch_or_cfg if hasattr(arch_or_cfg, "d_model") \
         else get_config(arch_or_cfg)
     return batch_specs(cfg, SHAPES[shape_name])
+
+
+# -------------------------------------------------- saddle-dsvc (the solver)
+SOLVER_ARCH = "saddle-dsvc"
+
+
+class SaddleDsvcShape(_NamedTuple):
+    """Input shape for the distributed Saddle-DSVC dry-run entry:
+    clients are mapped over ALL mesh axes (a 16x16 pod is k=256
+    clients, the 2x16x16 multi-pod k=512), each holding a round-robin
+    shard of the packed +- point set."""
+    name: str
+    n1: int
+    n2: int
+    d: int
+    nu_frac: float        # 0 => HM-Saddle; else nu = 1 / (nu_frac * n1)
+    block_size: int
+    chunk_steps: int
+
+
+SADDLE_DSVC_SHAPES: dict[str, SaddleDsvcShape] = {
+    # paper-scale-and-beyond: 1M points, d=256, nu-Saddle block mode
+    "svm_1m_nu": SaddleDsvcShape("svm_1m_nu", 1 << 19, 1 << 19, 256,
+                                 0.8, 128, 50),
+    # hard-margin single-coordinate mode (Algorithm 2 exactly)
+    "svm_1m_hm": SaddleDsvcShape("svm_1m_hm", 1 << 19, 1 << 19, 256,
+                                 0.0, 1, 50),
+}
+
+
+def build_saddle_dsvc_lowerable(mesh, shape: SaddleDsvcShape,
+                                backend: str = "jnp"):
+    """Returns (fn, args, meta) ready for ``jit(fn).lower(*args)``: the
+    PRODUCTION Saddle-DSVC chunk (``distributed.sharded_run_fn``) with
+    clients over every mesh axis, all args ShapeDtypeStructs.
+
+    ``meta`` carries (k, params, CommModel) so the dry-run can compare
+    the lowered module's measured collectives against the analytic
+    model (see repro.utils.comm_audit)."""
+    from repro.core import distributed, projections
+    from repro.utils import comm_audit
+
+    axis = tuple(mesh.axis_names)
+    k = int(math.prod(mesh.devices.shape))
+    nu = 1.0 / (shape.nu_frac * shape.n1) if shape.nu_frac else 0.0
+    fn, args = comm_audit.runner_lowerable(
+        mesh, axis, n1=shape.n1, n2=shape.n2, d=shape.d, nu=nu,
+        block_size=shape.block_size, chunk_steps=shape.chunk_steps,
+        backend=backend)
+    rounds = float(projections.BISECT_ROUNDS_SOLVER) if nu > 0 else 0.0
+    model = distributed.CommModel(k=k, nu_rounds_per_iter=rounds)
+    meta = {"k": k, "nu": nu, "model": model,
+            "block_size": shape.block_size,
+            "chunk_steps": shape.chunk_steps}
+    return fn, args, meta
 
 
 # ------------------------------------------------------------ step builders

@@ -5,7 +5,20 @@ we scan the partitioned module for all-gather / all-reduce /
 reduce-scatter / all-to-all / collective-permute ops and sum their
 result-shape bytes (a per-device proxy for link traffic; ring
 algorithms move ~(n-1)/n of that per hop, which we fold into the link
-bandwidth constant)."""
+bandwidth constant).
+
+Two granularities:
+
+* :func:`collective_stats` -- flat module-wide byte/count totals (the
+  roofline view; a collective inside a loop body is counted ONCE).
+* the structured view used by :mod:`repro.utils.comm_audit` --
+  :func:`collective_records` attributes every collective to its
+  enclosing computation and recovers the applied reduction (add/max)
+  from the ``to_apply`` region, and :func:`while_records` lists the
+  while ops with their body computation and XLA's
+  ``known_trip_count`` backend config, so callers can expand loop
+  bodies by their real trip counts and report PER-ITERATION counts.
+"""
 
 from __future__ import annotations
 
@@ -73,3 +86,132 @@ def collective_stats(hlo_text: str) -> CollectiveStats:
 
 def count_op(hlo_text: str, opname: str) -> int:
     return len(re.findall(rf"\s{re.escape(opname)}\(", hlo_text))
+
+
+# ==========================================================================
+# Structured (per-computation) view, used by the communication audit.
+# ==========================================================================
+
+_COMP_HEADER_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_COLLECTIVE_RE = re.compile(
+    r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_WHILE_RE = re.compile(
+    r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*.*?\swhile\(")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?"n"\s*:\s*"?(\d+)"?')
+
+
+class HloCollective(NamedTuple):
+    """One collective op, attributed to its enclosing computation."""
+    op: str               # all-reduce / all-gather / ...
+    reduce_kind: str      # "add" | "max" | "min" | "" (no to_apply)
+    elements: int         # total result elements (tuple shapes summed)
+    bytes: int            # result-shape bytes (per device)
+    computation: str      # name of the enclosing computation
+
+
+class HloWhile(NamedTuple):
+    """One while op: where it lives, its body, and the trip count XLA
+    proved (None when dynamic -- e.g. the engine's chunk loop, whose
+    trip count is a runtime operand)."""
+    computation: str
+    body: str
+    trip_count: int | None
+
+
+def split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """Map computation name -> its body lines.  HLO text prints one
+    computation per ``%name (...) -> ... {`` block; nesting never
+    occurs (bodies are separate top-level computations)."""
+    comps: dict[str, list[str]] = {}
+    current: str | None = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if current is None:
+            m = _COMP_HEADER_RE.match(stripped)
+            if m:
+                current = m.group(2)
+                comps[current] = []
+        elif stripped == "}":
+            current = None
+        else:
+            comps[current].append(stripped)
+    return comps
+
+
+def entry_computation(hlo_text: str) -> str:
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("ENTRY"):
+            m = _COMP_HEADER_RE.match(stripped)
+            if m:
+                return m.group(2)
+    raise ValueError("no ENTRY computation found in HLO text")
+
+
+def _shape_elements(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _reduce_kind(region_lines: list[str]) -> str:
+    text = "\n".join(region_lines)
+    for kind, opname in (("add", " add("), ("max", " maximum("),
+                         ("min", " minimum(")):
+        if opname in text:
+            return kind
+    return ""
+
+
+def collective_records(hlo_text: str) -> list[HloCollective]:
+    """Every collective op (start/done pairs deduplicated), attributed
+    to its computation, with the applied reduction recovered from its
+    ``to_apply`` region."""
+    comps = split_computations(hlo_text)
+    out = []
+    for comp, lines in comps.items():
+        for line in lines:
+            m = _COLLECTIVE_RE.match(line)
+            if not m or m.group(3) == "-done":
+                continue
+            shape_str, op = m.group(1), m.group(2)
+            kind = ""
+            ta = _TO_APPLY_RE.search(line)
+            if ta and ta.group(1) in comps:
+                kind = _reduce_kind(comps[ta.group(1)])
+            out.append(HloCollective(
+                op=op, reduce_kind=kind,
+                elements=_shape_elements(shape_str),
+                bytes=_shape_bytes(shape_str), computation=comp))
+    return out
+
+
+def while_records(hlo_text: str) -> list[HloWhile]:
+    """Every while op: enclosing computation, body computation, and the
+    ``known_trip_count`` XLA attached (None when it could not prove
+    one -- a dynamic trip count)."""
+    out = []
+    for comp, lines in split_computations(hlo_text).items():
+        for line in lines:
+            if not _WHILE_RE.match(line):
+                continue
+            b = _BODY_RE.search(line)
+            if not b:
+                continue
+            t = _TRIP_RE.search(line)
+            out.append(HloWhile(
+                computation=comp, body=b.group(1),
+                trip_count=int(t.group(1)) if t else None))
+    return out

@@ -1,0 +1,225 @@
+"""Theorem 8 as a tested invariant: the collectives XLA ACTUALLY emits
+for the sharded packed step must equal the analytic CommModel --
+per-iteration launch count and payload independent of n, d and k, for
+both nu regimes and both backends (repro.utils.comm_audit).
+
+All measurements lower + compile real post-SPMD modules on forced
+host-device meshes, so they run in ONE subprocess (jax pins the device
+count at first init); the module-scoped fixture batches every spec
+through a single `collect_audits` call and the tests assert against
+the returned records.
+"""
+
+import pytest
+
+from repro.core import distributed as dist
+from repro.core import projections
+from repro.utils import comm_audit
+
+pytestmark = pytest.mark.dist
+
+KS = (2, 8, 32)
+BASE = dict(n1=96, n2=112, d=32, block_size=4)
+NU = 1.0 / (0.8 * BASE["n1"])
+
+
+def _specs():
+    specs = []
+    for k in KS:
+        for nu in (0.0, NU):
+            specs.append({"k": k, "nu": nu, **BASE,
+                          # full production-chunk audit at one k per nu
+                          "runner": k == 8, "chunk_steps": 5})
+    # n/d variation (bytes must not scale with n or d) at one k
+    specs.append({"k": 2, "nu": NU, "n1": 768, "n2": 896, "d": 128,
+                  "block_size": 4})
+    # pallas-interpret backend stability at one k per nu
+    for nu in (0.0, NU):
+        specs.append({"k": 2, "nu": nu, **BASE, "backend": "pallas"})
+    return specs
+
+
+@pytest.fixture(scope="module")
+def audits():
+    recs = comm_audit.collect_audits(_specs())
+    assert recs, "audit subprocess returned nothing"
+    return recs
+
+
+def _find(audits, **want):
+    out = [r for r in audits
+           if all(r.get(k) == v for k, v in want.items())]
+    assert out, f"no audit record matching {want}"
+    return out
+
+
+def _model(k, nu):
+    rounds = float(projections.BISECT_ROUNDS_SOLVER) if nu > 0 else 0.0
+    return dist.CommModel(k=k, nu_rounds_per_iter=rounds)
+
+
+# --------------------------------------------------- count == CommModel
+@pytest.mark.parametrize("k", KS)
+@pytest.mark.parametrize("nu", [0.0, NU], ids=["hm", "nu"])
+def test_measured_equals_model(audits, k, nu):
+    """The measured post-SPMD per-iteration collective multiset is
+    EXACTLY the CommModel prediction, for every k and both regimes."""
+    rec = _find(audits, k=k, nu=nu, backend="jnp",
+                n1=BASE["n1"])[0]
+    model = _model(k, nu)
+    assert rec["measured"] == rec["predicted"], rec
+    assert rec["match"] is True
+    assert rec["per_iteration_count"] == \
+        model.collectives_per_iteration(BASE["block_size"])
+
+
+@pytest.mark.parametrize("nu", [0.0, NU], ids=["hm", "nu"])
+def test_count_independent_of_k(audits, nu):
+    """Per-DEVICE launch count and payload are k-invariant (each launch
+    just spans more devices) -- this is what makes total traffic
+    exactly O(k) x payload (Theorem 8)."""
+    recs = _find(audits, nu=nu, backend="jnp", n1=BASE["n1"])
+    counts = {r["per_iteration_count"] for r in recs}
+    payloads = {r["per_iteration_bytes"] for r in recs}
+    assert len(counts) == 1 and len(payloads) == 1, (counts, payloads)
+
+
+def test_count_and_bytes_independent_of_n_d(audits):
+    """Scalar-round collective counts AND bytes must not move when n
+    grows 8x and d grows 4x: per-iteration traffic is O(B + rounds),
+    NOT O(n*d) -- the regression this whole subsystem exists to catch
+    (an accidental per-point all-gather would explode this)."""
+    small = _find(audits, k=2, nu=NU, n1=BASE["n1"], backend="jnp")[0]
+    big = _find(audits, k=2, nu=NU, n1=768)[0]
+    assert big["n1"] * big["n2"] * big["d"] > \
+        8 * small["n1"] * small["n2"] * small["d"]
+    assert small["measured"] == big["measured"]
+    assert small["per_iteration_bytes"] == big["per_iteration_bytes"]
+
+
+def test_bytes_are_o_block_not_o_nd(audits):
+    """Per-iteration payload == the model's closed form
+    4 * (B + 2 + 2 [+ 2 + 2R + 4]) bytes -- orders of magnitude below
+    one row of the data (4*n*d), let alone O(n*d)."""
+    for rec in audits:
+        model = _model(rec["k"], rec["nu"])
+        want = 4 * model.payload_elements_per_iteration(
+            rec["block_size"])
+        assert rec["per_iteration_bytes"] == want, rec
+        assert rec["per_iteration_bytes"] < 4 * rec["n1"], rec
+
+
+# ------------------------------------------------- backend / chunk parity
+@pytest.mark.parametrize("nu", [0.0, NU], ids=["hm", "nu"])
+def test_backend_stable(audits, nu):
+    """jnp and pallas-interpret backends must emit the SAME collective
+    multiset (the kernels change compute layout, never communication)."""
+    jnp_rec = _find(audits, k=2, nu=nu, backend="jnp",
+                    n1=BASE["n1"])[0]
+    pl_rec = _find(audits, k=2, nu=nu, backend="pallas")[0]
+    assert jnp_rec["measured"] == pl_rec["measured"]
+    assert pl_rec["match"] is True
+
+
+@pytest.mark.parametrize("nu", [0.0, NU], ids=["hm", "nu"])
+def test_production_chunk_matches_single_step(audits, nu):
+    """The full production runner (distributed.sharded_run_fn -- the
+    multi-pod dry-run path) adds NOTHING inside the step loop: its
+    loop-body multiset equals the single-step lowering, and the only
+    out-of-loop collective is the once-per-chunk objective psum
+    (f32[d])."""
+    rec = _find(audits, k=8, nu=nu, backend="jnp")[0]
+    assert rec["runner_match"] is True
+    assert rec["runner_matches_step"] is True
+    assert rec["runner_per_chunk"] == {
+        f"all-reduce|add|{BASE['d']}": 1}, rec["runner_per_chunk"]
+
+
+def test_scalar_model_linear_in_k():
+    """The paper-convention scalar count is exactly linear in k and
+    independent of n, d (Theorem 8's O(k) per iteration)."""
+    for rounds in (0.0, float(projections.BISECT_ROUNDS_SOLVER)):
+        per_k = [dist.CommModel(k=k, nu_rounds_per_iter=rounds)
+                 .scalars_per_iteration() / k for k in (1, 5, 20, 256)]
+        assert len(set(per_k)) == 1, per_k
+
+
+# --------------------------------------------- production-mesh lowering
+@pytest.mark.slow
+@pytest.mark.parametrize("mesh", ["16x16", "2x16x16"])
+def test_dryrun_saddle_dsvc_lowers(mesh):
+    """launch/dryrun.py's saddle-dsvc entry lowers + compiles on the
+    production meshes and the audited collectives match the model
+    (run_one_saddle raises on mismatch).  Subprocess: 256/512 forced
+    host devices."""
+    import os
+    import subprocess
+    import sys
+
+    code = (
+        "import os, sys, json\n"
+        "os.environ['XLA_FLAGS'] = "
+        "'--xla_force_host_platform_device_count=512'\n"
+        "os.environ['JAX_PLATFORMS'] = 'cpu'\n"
+        "sys.path.insert(0, 'src')\n"
+        "from repro.launch import dryrun\n"
+        "rec = dryrun.run_one_saddle('svm_1m_nu', "
+        f"multi_pod={mesh == '2x16x16'})\n"
+        "assert rec['comm_audit']['match'] is True\n"
+        "print('SADDLE_DRYRUN_OK', rec['mesh'], "
+        "rec['comm_audit']['per_iteration_count'])\n")
+    env = dict(os.environ)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        env=env, timeout=600)
+    assert "SADDLE_DRYRUN_OK" in out.stdout, \
+        out.stdout[-2000:] + out.stderr[-4000:]
+
+
+# ----------------------------------------------------- model self-checks
+def test_model_multiset_totals_consistent():
+    for k in (1, 8):
+        for rounds in (0.0, 24.0):
+            m = dist.CommModel(k=k, nu_rounds_per_iter=rounds)
+            for b in (1, 4, 128):
+                ms = m.collective_multiset(b)
+                assert sum(ms.values()) == \
+                    m.collectives_per_iteration(b)
+                assert sum(e * c for (_, _, e), c in ms.items()) == \
+                    m.payload_elements_per_iteration(b)
+            want = 3 if rounds == 0 else 5 + int(rounds)
+            assert m.collectives_per_iteration(1) == want
+
+
+def test_audit_hlo_rejects_unknown_dynamic_loop():
+    """A collective inside a while with no known trip count (below the
+    step loop) must fail loudly, not undercount."""
+    hlo = """\
+HloModule m
+
+%region_add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add.1 = f32[] add(f32[] %a, f32[] %b)
+}
+
+%body.1 (p: (s32[], f32[2])) -> (s32[], f32[2]) {
+  %p = (s32[], f32[2]) parameter(0)
+  %x = f32[2]{0} get-tuple-element((s32[], f32[2]) %p), index=1
+  %ar = f32[2]{0} all-reduce(f32[2]{0} %x), to_apply=%region_add
+  ROOT %t = (s32[], f32[2]) tuple(s32[] %c, f32[2]{0} %ar)
+}
+
+ENTRY %main (p0: (s32[], f32[2])) -> (s32[], f32[2]) {
+  %p0 = (s32[], f32[2]) parameter(0)
+  ROOT %w = (s32[], f32[2]) while((s32[], f32[2]) %p0), condition=%cond.1, body=%body.1
+}
+"""
+    with pytest.raises(ValueError, match="known_trip_count"):
+        comm_audit.audit_hlo(hlo, has_step_loop=False)
+    # with the step loop flagged, that SAME dynamic loop is the
+    # iteration boundary and the body is the per-iteration multiset
+    counts = comm_audit.audit_hlo(hlo, has_step_loop=True)
+    assert counts.per_iteration == {("all-reduce", "add", 2): 1}
+    assert counts.per_chunk == {}

@@ -9,8 +9,9 @@ import sys
 import pytest
 
 # LM-side model/system tests dominate the full-suite runtime; the fast
-# CI tier (scripts/ci.sh) deselects them with -m 'not slow'
-pytestmark = pytest.mark.slow
+# CI tier (scripts/ci.sh) deselects them with -m 'not slow'.  Also
+# `dist`: these lower on a forced multi-device host mesh.
+pytestmark = [pytest.mark.slow, pytest.mark.dist]
 
 CODE = r"""
 import os

@@ -219,6 +219,84 @@ def test_block_size_exceeding_d_rejected(problem):
         saddle.solve(xp, xm, num_iters=10, block_size=xp.shape[1] + 1)
 
 
+# ------------------------------------------------ padding edge cases
+@pytest.mark.parametrize("k", [2, 3, 7])
+def test_parity_n_not_divisible_by_k(problem, k):
+    """Parity matrix extension: k values where NEITHER class count
+    (37, 53) divides evenly, so every shard carries round-robin padding
+    points -- nu>0 so the capped projection runs over the padded
+    layout."""
+    xp, xm = problem
+    nu = 1.0 / (0.8 * xp.shape[0])
+    ser = saddle.solve(xp, xm, nu=nu, num_iters=120)
+    dk = dist.solve_distributed(xp, xm, k=k, nu=nu, num_iters=120)
+    np.testing.assert_allclose(np.asarray(ser.state.w),
+                               np.asarray(dk.state.w[0]), atol=1e-5)
+    eta, xi = dist.gather_duals(dk.state, xp.shape[0], xm.shape[0], k)
+    np.testing.assert_allclose(np.exp(np.asarray(ser.state.log_eta)),
+                               eta, atol=1e-5)
+    np.testing.assert_allclose(np.exp(np.asarray(ser.state.log_xi)),
+                               xi, atol=1e-5)
+
+
+def test_nu_caps_no_mass_leak_into_lane_padding(problem):
+    """n_pad > n with nu > 0: the capped-simplex projection must NEVER
+    move mass into lane-padding slots -- they stay at NEG_INF exactly
+    (exp == 0) and each class still sums to 1 over its REAL slots with
+    every weight below the cap."""
+    import jax.numpy as jnp
+    from repro.core import preprocess as ppm
+    xp, xm = problem
+    n1, n2 = xp.shape[0], xm.shape[0]
+    nu = 1.0 / (0.6 * n1)
+    params = saddle.make_params(n1 + n2, xp.shape[1], 1e-3, 0.1, nu=nu)
+    pts = ppm.pack_points(xp, xm)
+    assert pts.n_pad > n1 + n2          # lane padding is actually active
+    st = engine.init_packed_state(pts.sign, n1, n2, xp.shape[1])
+    st, _ = engine.run_chunk_packed(st, jax.random.key(3), pts.x_t,
+                                    pts.sign, 150, params=params,
+                                    chunk_steps=150)
+    lam = np.asarray(st.log_lam)
+    assert (lam[n1 + n2:] == engine.NEG_INF).all()
+    eta = np.exp(lam[:n1])
+    xi = np.exp(lam[n1:n1 + n2])
+    assert abs(eta.sum() - 1.0) < 1e-4 and abs(xi.sum() - 1.0) < 1e-4
+    assert eta.max() <= nu + 1e-5 and xi.max() <= nu + 1e-5
+    # distributed: round-robin padding slots (sign 0) must stay NEG_INF
+    k = 3
+    xp_sh, mask_p = dist.shard_points(xp, k)
+    xm_sh, mask_m = dist.shard_points(xm, k)
+    x_t, sign = dist.pack_shards(xp_sh, mask_p, xm_sh, mask_m)
+    dst = engine.init_packed_state(jnp.asarray(sign), n1, n2,
+                                   xp.shape[1])
+    dst, _ = dist.run_chunk_sim_packed(
+        dst, jax.random.key(3), jnp.asarray(x_t), jnp.asarray(sign),
+        150, params=params, chunk_steps=150)
+    dlam = np.asarray(dst.log_lam)
+    pad = sign == 0
+    assert (dlam[pad] == engine.NEG_INF).all()
+    assert abs(np.exp(dlam[sign > 0]).sum() - 1.0) < 1e-4
+    assert np.exp(dlam[sign != 0]).max() <= nu + 1e-5
+
+
+def test_k1_distributed_equals_serial_bit_for_bit(problem):
+    """k=1 is the degenerate client: the ONLY difference from serial is
+    the size-1 psum/pmax, which must be exact -- every state leaf
+    bit-for-bit equal, nu=0 and nu>0."""
+    xp, xm = problem
+    for nu_frac in (0.0, 0.8):
+        nu = nu_frac and 1.0 / (nu_frac * xp.shape[0])
+        ser = saddle.solve(xp, xm, nu=nu, num_iters=120)
+        d1 = dist.solve_distributed(xp, xm, k=1, nu=nu, num_iters=120)
+        np.testing.assert_array_equal(np.asarray(ser.state.w),
+                                      np.asarray(d1.state.w[0]))
+        for a, b in [(ser.state.log_eta, d1.state.log_eta[0]),
+                     (ser.state.log_xi, d1.state.log_xi[0]),
+                     (ser.state.u_p, d1.state.u_p[0]),
+                     (ser.state.u_m, d1.state.u_m[0])]:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 # ------------------------------------------------- compile-once driver
 def test_run_chunk_compiles_once_with_partial_final_chunk(problem):
     """A record_every-chunked solve whose final chunk is partial (250 =

@@ -194,6 +194,105 @@ def test_engine_packed_projection_matches_oracles(n1, n2, nu_scale):
     assert (out[n1 + n2:] == engine.NEG_INF).all()
 
 
+# ----------------------------- bisection degenerate regimes (PR 2 note)
+# The PR 2 note flagged that the SORTED rule loses f32 precision under
+# extreme mass concentration, so these pins assert the closed-form
+# rescale INVARIANTS of capped_bisect_masked (sum preserved, no element
+# above cap, identity on feasible input) -- never equality with the
+# precision-losing sorted oracle.
+
+def _bisect_invariants(out, nu, total=1.0, atol=2e-5):
+    assert np.all(np.isfinite(out))
+    assert out.max() <= nu + atol
+    assert out.min() >= -1e-7
+    assert abs(out.sum() - total) < 1e-4
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(8, 200), st.floats(1.05, 4.0), st.integers(0, 10_000))
+def test_bisect_all_mass_on_one_point(n, nu_scale, seed):
+    """All mass concentrated on one entry (the rest carries f32 dust):
+    the cap set is that single entry and the rescale factor for the
+    dust block is enormous -- the bracket stress case."""
+    rng = np.random.default_rng(seed)
+    nu = nu_scale / n
+    eta = rng.uniform(1e-30, 1e-12, size=n).astype(np.float32)
+    eta[rng.integers(n)] = 1.0 - eta.sum() + eta[rng.integers(n)]
+    eta = (eta / eta.sum()).astype(np.float32)
+    out = np.asarray(proj.capped_simplex_project_bisect(
+        jnp.asarray(eta), nu))
+    _bisect_invariants(out, nu)
+    # the concentrated entry must be clamped exactly at the cap
+    assert abs(out[np.argmax(eta)] - nu) < 2e-5
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(4, 128), st.integers(0, 10_000))
+def test_bisect_everything_at_cap(n, seed):
+    """nu -> 1/n (every entry must sit at the cap): the unique feasible
+    point is uniform.  Tiny perturbations of uniform input must still
+    land on (nearly) uniform output with the sum preserved."""
+    rng = np.random.default_rng(seed)
+    nu = 1.0 / n
+    eta = np.full(n, nu, np.float32)
+    eta += rng.uniform(-0.1 * nu, 0.1 * nu, size=n).astype(np.float32)
+    eta = (eta / eta.sum()).astype(np.float32)
+    out = np.asarray(proj.capped_simplex_project_bisect(
+        jnp.asarray(eta), nu))
+    _bisect_invariants(out, nu)
+    np.testing.assert_allclose(out, nu, atol=2e-5)
+
+
+def test_bisect_masked_empty_mask():
+    """A class whose mask selects NOTHING must come back all-zero (no
+    NaNs from the 0/0 rescale) without disturbing the other class."""
+    from repro.core.projections import capped_bisect_masked
+    rng = np.random.default_rng(11)
+    n = 64
+    eta = _rand_simplex(rng, n).astype(np.float32)
+    nu = 1.5 / n
+    masks = np.zeros((2, n), bool)
+    masks[0, :] = True                       # class 0: everything
+    out2 = np.asarray(capped_bisect_masked(
+        jnp.asarray(eta), nu, jnp.asarray(masks),
+        rounds=proj.BISECT_ROUNDS))
+    _bisect_invariants(out2, nu)
+    want = np.asarray(proj.capped_simplex_project_bisect(
+        jnp.asarray(eta), nu))
+    np.testing.assert_allclose(out2, want, atol=2e-6)
+    # both masks empty -> all zeros, still finite
+    none = np.asarray(capped_bisect_masked(
+        jnp.asarray(eta), nu, jnp.zeros((1, n), bool),
+        rounds=proj.BISECT_ROUNDS))
+    assert np.all(np.isfinite(none))
+    np.testing.assert_array_equal(none, 0.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(16, 128),
+       st.floats(1e-7, 1e-1),
+       st.integers(0, 10_000))
+def test_bisect_f32_mass_concentration(n, delta, seed):
+    """Property form of the mass-concentration pin: (1-delta) of the
+    mass on one entry, delta spread over the rest, across the f32 range
+    where the sorted rule's prefix-sum Omega suffers catastrophic
+    cancellation.  Assert the rescale invariants and agreement with the
+    loop oracle (ground truth) -- NOT with the sorted rule."""
+    rng = np.random.default_rng(seed)
+    eta = rng.exponential(size=n).astype(np.float32)
+    eta = eta / eta.sum() * delta
+    j = rng.integers(n)
+    eta[j] = 1.0 - (eta.sum() - eta[j])
+    eta = eta.astype(np.float32)
+    nu = 2.0 / n
+    out = np.asarray(proj.capped_simplex_project_bisect(
+        jnp.asarray(eta), nu))
+    _bisect_invariants(out, nu)
+    want = np.asarray(proj.capped_simplex_project_loop(
+        jnp.asarray(eta), nu))
+    np.testing.assert_allclose(out, want, atol=2e-5)
+
+
 # ------------------------------------------------ entropy prox vs argmin
 def test_entropy_prox_is_argmin():
     """Lemma 10: the closed form solves the prox problem (check by
