@@ -7,7 +7,7 @@ import traceback
 from benchmarks import (engine_bench, fig1_nusvm_convergence,
                         fig2_size_scaling, fig3_dist_hard_margin,
                         fig4_dist_nusvm, kernels_bench, roofline,
-                        table1_hard_margin, table3_nu_sweep,
+                        serve_bench, table1_hard_margin, table3_nu_sweep,
                         table4_density, theory_iters_comm)
 from benchmarks.common import emit, header, write_json
 
@@ -22,6 +22,7 @@ SUITES = [
     ("theory", theory_iters_comm),
     ("kernels", kernels_bench),
     ("engine", engine_bench),
+    ("serve", serve_bench),
     ("roofline", roofline),
 ]
 

@@ -1,0 +1,114 @@
+"""Multi-tenant fit-serving throughput.
+
+Requests/sec of the continuous-batching solver service
+(repro.serve.solver_service) at S in {1, 4, 8} slots against the
+sequential baseline -- the same R requests solved one ``SaddleSVC.fit``
+at a time.  Every path runs the SAME slot-batched engine (a sequential
+fit is the S=1 degenerate batch), so the delta is pure batching: S
+problems per compiled step amortize the per-iteration fixed costs
+(dispatch, RNG, scalar ops) that a single tiny fit cannot.
+
+The request shape is deliberately SMALL (n=200, d=32): the paper's
+per-iteration work is O(B + n) after preprocessing, so small fits are
+the overhead-dominated regime the service exists for (the motivation's
+"many independent instances as the unit of work").
+
+Also asserted here (hard, in both quick and full mode): ZERO
+recompiles after bucket warm-up -- the timed phase must be 100%
+compile-cache hits, checked via the service's trace accounting AND a
+global engine.trace_counts snapshot.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, emit_count
+from repro.core import engine
+from repro.core.svm import SaddleSVC
+from repro.data import synthetic
+from repro.serve.solver_service import FitRequest, SolverService
+
+R = 8            # requests per trial
+N1 = N2 = 100    # points per class  -> (256, 32) bucket
+D = 32
+ITERS = 2000
+CHUNK = 250      # service chunk == sequential record_every (same sync
+                 # cadence for both paths)
+
+
+def _requests():
+    return [(synthetic.blobs(N1, N2, D, gap=0.8, spread=0.3, seed=i), i)
+            for i in range(R)]
+
+
+def _seq_pass(reqs) -> float:
+    t0 = time.perf_counter()
+    for ds, seed in reqs:
+        SaddleSVC(num_iters=ITERS, seed=seed,
+                  record_every=CHUNK).fit(ds.x, ds.y)
+    return time.perf_counter() - t0
+
+
+def _svc_pass(reqs, num_slots: int):
+    svc = SolverService(num_slots=num_slots, chunk_steps=CHUNK)
+    t0 = time.perf_counter()
+    for ds, seed in reqs:
+        svc.submit(FitRequest(x=ds.x, y=ds.y, seed=seed,
+                              num_iters=ITERS))
+    svc.run()
+    return time.perf_counter() - t0, svc
+
+
+def run(quick: bool = True) -> None:
+    reqs = _requests()
+    reps = 3 if quick else 4
+    slots = (1, 4, 8)
+
+    # ---- warm-up: sequential path + every bucket executable ---------
+    _seq_pass(reqs)
+    for s in slots:
+        _svc_pass(reqs, s)
+    snap = dict(engine.trace_counts)
+
+    # ---- timed passes, INTERLEAVED so transient host load hits the
+    # baseline and the service alike (wall-clock ratios on a shared
+    # CPU are otherwise dominated by when, not what, you measure) ----
+    t_seq = None
+    best: dict[int, float] = {}
+    stats: dict[int, dict] = {}
+    for _ in range(reps):
+        dt = _seq_pass(reqs)
+        t_seq = dt if t_seq is None else min(t_seq, dt)
+        for s in slots:
+            dt, svc = _svc_pass(reqs, s)
+            if s not in best or dt < best[s]:
+                best[s] = dt
+            assert svc.stats["compiles"] == 0 and \
+                svc.stats["cache_hits"] == svc.stats["chunk_calls"], \
+                svc.stats
+            stats[s] = svc.stats
+    delta = {k: v - snap.get(k, 0) for k, v in engine.trace_counts.items()
+             if v != snap.get(k, 0)}
+    assert delta == {}, f"recompile after bucket warm-up: {delta}"
+
+    emit("serve/sequential_fit_loop", t_seq / R,
+         f"n={N1 + N2};d={D};iters={ITERS};R={R};rps={R / t_seq:.1f}")
+    for s in slots:
+        emit(f"serve/slots{s}", best[s] / R,
+             f"rps={R / best[s]:.1f};speedup={t_seq / best[s]:.2f}x;"
+             f"chunks={stats[s]['chunk_calls']};cache_hits=100%")
+    speedup8 = t_seq / best[8]
+    emit_count("serve/recompiles_after_warmup", 0, "asserted_zero")
+
+    # ---- acceptance floor: >= 2x over the sequential loop at S=8 ----
+    if speedup8 < 2.0:
+        # Wall-clock ratios are load sensitive (engine_bench precedent):
+        # the quick/ci smoke only WARNS; the full run fails.
+        msg = (f"S=8 serving speedup {speedup8:.2f}x < 2.0x floor "
+               f"(typically measures 2.2-2.4x on an idle CPU)")
+        if not quick:
+            raise AssertionError(msg)
+        print(f"# WARNING: {msg}")

@@ -228,8 +228,13 @@ def step(state, key: jax.Array, xp: jax.Array, xm: jax.Array, p, *,
     delta_m = _all_sum(delta_m, axis_name)
 
     # Line 4 (round 2): every client performs the identical w update.
+    # Multiply by the precomputed reciprocal instead of dividing by
+    # (sigma + 1): bit-identical to what XLA's divide-by-constant
+    # rewrite produced, and -- crucially -- ALSO bit-identical when the
+    # scalar is a traced per-slot value (a runtime divide rounds
+    # differently), keeping every engine mode in lockstep.
     w_old = state.w[idx]
-    w_new = (w_old + p.sigma * (delta_p - delta_m)) / (p.sigma + 1.0)
+    w_new = (w_old + p.sigma * (delta_p - delta_m)) * (1.0 / (p.sigma + 1.0))
     dw = w_new - w_old
 
     # Lines 5-6 (rounds 2-3): MWU dual updates.
@@ -344,23 +349,23 @@ def unpack_state(pstate: PackedState, n1: int, n2: int, cls):
     )
 
 
-def _dual_update_packed(x_t, idx, cols_t, log_lam, u, dw, sign, p,
-                        axis_name, backend):
+def _dual_update_packed(x_t, idx, cols_t, log_lam, u, dw, sign, sc,
+                        d_eff, axis_name, backend):
     """Packed lines 5-6 + incremental u for BOTH classes in one pass,
     with per-class logsumexp normalizers computed in the same sweep
     (masked partials) and combined across clients as (2,)-vector
-    all-reduces.  Returns (log_new_normalized, u_new)."""
-    d_eff = p.d / p.block_size
+    all-reduces.  ``sc`` carries the per-problem scalars (python floats
+    on the static SaddleParams path, traced per-slot f32 scalars under
+    the slot-batched driver).  Returns (log_new_normalized, u_new)."""
     if backend == "pallas":
         from repro.kernels import ops as kops
         log_new, u_new, m_p, s_p, m_m, s_m = kops.mwu_update_packed(
             x_t, idx, log_lam, u, dw, sign,
-            gamma=p.gamma, tau=p.tau, d_eff=d_eff)
+            gamma=sc.gamma, tau=sc.tau, d_eff=d_eff)
     else:
         dv = dw @ cols_t                       # (n_pad,) rank-B update
         v = sign * (u + d_eff * dv)
-        c = 1.0 / (p.gamma + d_eff / p.tau)
-        log_new = c * ((d_eff / p.tau) * log_lam - v)
+        log_new = sc.mwu_c * (sc.mwu_dot * log_lam - v)
         u_new = u + dv
         is_p = sign > 0
         is_m = sign < 0
@@ -396,6 +401,106 @@ def _capped_project_packed(log_lam, sign, nu, axis_name):
     return jnp.where(eta > 0, jnp.log(jnp.maximum(eta, 1e-38)), NEG_INF)
 
 
+class SlotParams(NamedTuple):
+    """Per-problem step scalars, decoupled from the shape-static fields
+    of ``SaddleParams`` (d, block_size) so ONE compiled executable can
+    serve problems that differ only in their parameter values.
+
+    On the classic ``step_packed(p: SaddleParams)`` path the fields are
+    python floats derived at trace time (:func:`scalarize_params`) --
+    the arithmetic is done in f64 on the host and baked as f32
+    constants, exactly as the inline expressions used to be, so the op
+    graph is unchanged.  Under the slot-batched driver each field is a
+    traced per-slot f32 scalar holding the SAME f32 value (the host
+    derivation also runs in f64 before the cast), which keeps the slot
+    path numerically aligned with the static path.
+
+    ``nu`` is the EFFECTIVE capped-simplex cap: for hard-margin
+    problems it is 1.0, which makes the projection an exact identity
+    (each class simplex already satisfies max eta_i <= 1), so
+    hard-margin and nu-SVM slots can share a projecting executable.
+    Whether the projection runs at all stays a STATIC choice
+    (``project``).  ``gap_tol`` is the relative duality-gap early-stop
+    threshold (0 disables; only read by the slot chunk driver).
+    """
+    theta: float | jax.Array
+    sigma: float | jax.Array
+    inv_sig1: float | jax.Array  # 1 / (sigma + 1), the w-update scale
+    gamma: float | jax.Array
+    tau: float | jax.Array
+    mwu_c: float | jax.Array     # 1 / (gamma + d_eff / tau)
+    mwu_dot: float | jax.Array   # d_eff / tau
+    nu: float | jax.Array        # effective cap (1.0 == identity)
+    gap_tol: float | jax.Array
+
+
+def scalarize_params(p, gap_tol: float = 0.0) -> SlotParams:
+    """Derive the per-problem step scalars from a SaddleParams in host
+    (f64) arithmetic -- identical to the constants the static step has
+    always baked."""
+    d_eff = p.d / p.block_size
+    return SlotParams(
+        theta=p.theta, sigma=p.sigma, inv_sig1=1.0 / (p.sigma + 1.0),
+        gamma=p.gamma, tau=p.tau,
+        mwu_c=1.0 / (p.gamma + d_eff / p.tau),
+        mwu_dot=d_eff / p.tau,
+        nu=p.nu if p.nu > 0.0 else 1.0,
+        gap_tol=gap_tol)
+
+
+def slot_params_row(p, gap_tol: float = 0.0) -> SlotParams:
+    """:func:`scalarize_params` as a row of f32 arrays, ready to be
+    stacked into the (S,)-shaped SlotParams of a slot batch."""
+    import numpy as np
+    sc = scalarize_params(p, gap_tol)
+    return SlotParams(*(np.float32(v) for v in sc))
+
+
+def _step_packed_core(state: PackedState, key: jax.Array, x_t: jax.Array,
+                      sign: jax.Array, sc: SlotParams, *, d: int,
+                      block_size: int, project: bool,
+                      axis_name: str | None = None,
+                      backend: str = "jnp") -> PackedState:
+    """The packed iteration parameterized by step SCALARS (see
+    :class:`SlotParams`): shared verbatim by the classic per-problem
+    step (python-float scalars) and the slot-batched driver (traced
+    per-slot scalars under ``vmap``)."""
+    d_eff = d / block_size
+    idx = sample_block(key, d, block_size)
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        cols_t = None                    # gathered inside the kernels
+        delta = kops.momentum_dot_packed(
+            x_t, idx, state.log_lam, state.log_lam_prev, sign, sc.theta)
+    else:
+        cols_t = jnp.take(x_t, idx, axis=0)          # (B, n_pad) CONTIGUOUS
+        lam = jnp.exp(state.log_lam)
+        lam_prev = jnp.exp(state.log_lam_prev)
+        delta = cols_t @ (sign * (lam + sc.theta * (lam - lam_prev)))
+    delta = _all_sum(delta, axis_name)               # round 1
+
+    # Line 4 (round 2): every client performs the identical w update
+    # (delta already IS delta+ - delta-, folded by the sign).
+    w_old = state.w[idx]
+    w_new = (w_old + sc.sigma * delta) * sc.inv_sig1
+    dw = w_new - w_old
+
+    # Lines 5-6 (rounds 2-3): ONE packed MWU pass for both classes.
+    log_new, u_new = _dual_update_packed(
+        x_t, idx, cols_t, state.log_lam, state.u, dw, sign, sc, d_eff,
+        axis_name, backend)
+
+    # Round 4: sort-free nu-Saddle capped-simplex projection.
+    if project:
+        log_new = _capped_project_packed(log_new, sign, sc.nu, axis_name)
+
+    return PackedState(
+        w=state.w.at[idx].set(w_new),
+        log_lam=log_new, log_lam_prev=state.log_lam,
+        u=u_new, t=state.t + 1,
+    )
+
+
 def step_packed(state: PackedState, key: jax.Array, x_t: jax.Array,
                 sign: jax.Array, p, *, axis_name: str | None = None,
                 backend: str = "jnp") -> PackedState:
@@ -405,49 +510,25 @@ def step_packed(state: PackedState, key: jax.Array, x_t: jax.Array,
     its +-1/0 slot vector (see preprocess.pack_points).  Under an axis,
     the key is identical across clients (the server broadcasts i*).
     """
-    d, b = p.d, p.block_size
-    idx = sample_block(key, d, b)
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-        cols_t = None                    # gathered inside the kernels
-        delta = kops.momentum_dot_packed(
-            x_t, idx, state.log_lam, state.log_lam_prev, sign, p.theta)
-    else:
-        cols_t = jnp.take(x_t, idx, axis=0)          # (B, n_pad) CONTIGUOUS
-        lam = jnp.exp(state.log_lam)
-        lam_prev = jnp.exp(state.log_lam_prev)
-        delta = cols_t @ (sign * (lam + p.theta * (lam - lam_prev)))
-    delta = _all_sum(delta, axis_name)               # round 1
+    return _step_packed_core(state, key, x_t, sign, scalarize_params(p),
+                             d=p.d, block_size=p.block_size,
+                             project=p.nu > 0.0, axis_name=axis_name,
+                             backend=backend)
 
-    # Line 4 (round 2): every client performs the identical w update
-    # (delta already IS delta+ - delta-, folded by the sign).
-    w_old = state.w[idx]
-    w_new = (w_old + p.sigma * delta) / (p.sigma + 1.0)
-    dw = w_new - w_old
 
-    # Lines 5-6 (rounds 2-3): ONE packed MWU pass for both classes.
-    log_new, u_new = _dual_update_packed(
-        x_t, idx, cols_t, state.log_lam, state.u, dw, sign, p,
-        axis_name, backend)
-
-    # Round 4: sort-free nu-Saddle capped-simplex projection.
-    if p.nu > 0.0:
-        log_new = _capped_project_packed(log_new, sign, p.nu, axis_name)
-
-    return PackedState(
-        w=state.w.at[idx].set(w_new),
-        log_lam=log_new, log_lam_prev=state.log_lam,
-        u=u_new, t=state.t + 1,
-    )
+def objective_from_duals(log_lam: jax.Array, x_t: jax.Array,
+                         sign: jax.Array, axis_name=None) -> jax.Array:
+    """0.5 * ||A eta - B xi||^2 from packed log duals: the signed dual
+    combination x_t @ (sign * lam) IS A eta - B xi.  (Single source of
+    truth -- the per-problem and per-slot objectives both call this.)"""
+    diff = x_t @ (sign * jnp.exp(log_lam))
+    diff = _all_sum(diff, axis_name)
+    return 0.5 * jnp.sum(diff * diff)
 
 
 def objective_packed(state: PackedState, x_t: jax.Array, sign: jax.Array,
                      axis_name=None) -> jax.Array:
-    """0.5 * ||A eta - B xi||^2 from the packed state: the signed dual
-    combination x_t @ (sign * lam) IS A eta - B xi."""
-    diff = x_t @ (sign * jnp.exp(state.log_lam))
-    diff = _all_sum(diff, axis_name)
-    return 0.5 * jnp.sum(diff * diff)
+    return objective_from_duals(state.log_lam, x_t, sign, axis_name)
 
 
 def chunk_body_packed(state, key, x_t, sign, params, num_steps, *,
@@ -477,6 +558,199 @@ def run_chunk_packed(state, key, x_t, sign, num_steps, *, params,
     return chunk_body_packed(state, key, x_t, sign, params, num_steps,
                              chunk_steps=chunk_steps, axis_name=None,
                              backend=backend)
+
+
+# ==========================================================================
+# Slot-batched driver (multi-tenant serving): S independent problems
+# through ONE compiled step via vmap over a leading slot axis.
+# ==========================================================================
+
+
+class SlotState(NamedTuple):
+    """S independent packed solver states stacked on a leading SLOT
+    axis, plus the per-slot serving lifecycle fields.
+
+    A slot is a reusable execution lane of the multi-tenant driver:
+
+      FREE      ``active == False`` and no request assigned.  The lane
+                still flows through the vmapped step every iteration
+                (that is what keeps the executable shape-static), but
+                every result is discarded by the active mask.
+      RUNNING   ``active == True``: the slot steps while
+                ``t < max_t`` and its duality gap is above the slot's
+                ``gap_tol``.
+      FINISHED  the chunk driver flipped ``active`` off (budget
+                exhausted or gap converged).  The state stays intact
+                until the host harvests it and either re-admits a new
+                request into the lane (:func:`admit_into_slot`
+                overwrites EVERY field -- no state can leak from the
+                previous occupant) or leaves it FREE.
+
+    ``key`` is the per-slot PRNG chain: each chunk splits it exactly
+    like the serial driver splits its solve key, so a slot admitted at
+    seed s replays the SAME block-coordinate schedule as a solo
+    ``saddle.solve(seed=s)`` at the same bucket shape.
+    """
+    w: jax.Array             # (S, d)
+    log_lam: jax.Array       # (S, n_pad)
+    log_lam_prev: jax.Array  # (S, n_pad)
+    u: jax.Array             # (S, n_pad)
+    t: jax.Array             # (S,) per-slot iteration counter
+    max_t: jax.Array         # (S,) per-slot iteration budget
+    key: jax.Array           # (S,) per-slot PRNG chains
+    active: jax.Array        # (S,) bool lifecycle mask
+
+    @property
+    def num_slots(self) -> int:
+        return self.w.shape[0]
+
+
+def init_slot_state(num_slots: int, n_pad: int, d: int) -> SlotState:
+    """An all-FREE slot table for one (n_pad, d) bucket."""
+    s = num_slots
+    neg = jnp.full((s, n_pad), NEG_INF, jnp.float32)
+    return SlotState(
+        w=jnp.zeros((s, d), jnp.float32),
+        log_lam=neg, log_lam_prev=jnp.copy(neg),
+        u=jnp.zeros((s, n_pad), jnp.float32),
+        t=jnp.zeros((s,), jnp.int32),
+        max_t=jnp.zeros((s,), jnp.int32),
+        key=jax.random.split(jax.random.key(0), s),
+        active=jnp.zeros((s,), bool),
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def admit_into_slot(state: SlotState, slot: jax.Array,
+                    pstate: PackedState, key: jax.Array,
+                    max_t: jax.Array) -> SlotState:
+    """Admit a freshly initialized problem into lane ``slot`` (a traced
+    index: one compile serves every lane).  Every per-slot field is
+    overwritten -- w, duals, u, t, budget, PRNG chain, active flag --
+    so a reused lane cannot leak its previous occupant's state."""
+    return SlotState(
+        w=state.w.at[slot].set(pstate.w),
+        log_lam=state.log_lam.at[slot].set(pstate.log_lam),
+        log_lam_prev=state.log_lam_prev.at[slot].set(pstate.log_lam_prev),
+        u=state.u.at[slot].set(pstate.u),
+        t=state.t.at[slot].set(pstate.t),
+        max_t=state.max_t.at[slot].set(jnp.asarray(max_t, jnp.int32)),
+        key=state.key.at[slot].set(key),
+        active=state.active.at[slot].set(True),
+    )
+
+
+def _capped_min_masked(scores: jax.Array, mask: jax.Array,
+                       nu: jax.Array) -> jax.Array:
+    """min_{eta in D(nu)} <scores, eta> restricted to ``mask`` with a
+    TRACED cap: greedy water-filling puts weight min(nu, max(0, 1-i*nu))
+    on the i-th smallest masked score.  nu=1 degenerates to the plain
+    min (the hard-margin inner problem), so one formula serves both
+    slot kinds."""
+    big = jnp.float32(1e30)
+    s = jnp.sort(jnp.where(mask, scores, big))
+    w = jnp.clip(1.0 - jnp.arange(s.shape[0]) * nu, 0.0, nu)
+    return jnp.sum(jnp.where(w > 0, s * w, 0.0))
+
+
+def saddle_gap_packed(w: jax.Array, x_t: jax.Array, sign: jax.Array,
+                      nu: jax.Array) -> jax.Array:
+    """g(w) = min_{eta,xi} w^T A eta - w^T B xi - ||w||^2/2 on the
+    packed layout (the per-slot early-stop diagnostic; nu here is the
+    EFFECTIVE cap, 1.0 for hard margin)."""
+    s = w @ x_t                                      # (n_pad,) <w, x_i>
+    inner_p = _capped_min_masked(s, sign > 0, nu)
+    inner_m = -_capped_min_masked(-s, sign < 0, nu)
+    return inner_p - inner_m - 0.5 * jnp.sum(w * w)
+
+
+def slot_trace_key(num_slots: int, n_pad: int, d: int, block_size: int,
+                   chunk_steps: int, project: bool, check_gap: bool,
+                   backend: str) -> tuple:
+    """The ``trace_counts`` key of one slot-chunk executable -- i.e.
+    the compile-cache key a serving layer warms per bucket."""
+    return ("slots", num_slots, n_pad, d, block_size, chunk_steps,
+            project, check_gap, backend)
+
+
+def chunk_body_slots(state: SlotState, x_t: jax.Array, sign: jax.Array,
+                     sp: SlotParams, num_steps, *, chunk_steps: int,
+                     d: int, block_size: int, project: bool,
+                     check_gap: bool, backend: str = "jnp"):
+    """One slot-batched chunk: ``num_steps`` (dynamic, <= static
+    ``chunk_steps``) vmapped packed iterations over every lane.
+
+    Per iteration each slot advances iff ``active & (t < max_t)`` --
+    the step is computed for every lane (shape-static) and discarded
+    by the mask, so a lane that exhausts its budget mid-chunk freezes
+    at exactly ``max_t`` iterations (same schedule as a solo solve)
+    without halting the batch.  Each slot draws its block coordinates
+    from its OWN key chain: the chain is split once per chunk (exactly
+    the serial driver's ``key, sub = split(key)`` discipline) and the
+    per-step keys are pre-split at the static ``chunk_steps`` shape.
+
+    At the chunk boundary every slot's objective is computed on device
+    and -- when ``check_gap`` -- its duality gap (:func:
+    `saddle_gap_packed`); a slot whose relative gap falls below its
+    ``gap_tol`` or whose budget is exhausted goes inactive, freeing
+    its lane for mid-run admission.  Returns (new_state, obj (S,)).
+    """
+    trace_counts[slot_trace_key(
+        state.num_slots, x_t.shape[-1], d, block_size, chunk_steps,
+        project, check_gap, backend)] += 1           # trace-time only
+
+    splits = jax.vmap(jax.random.split)(state.key)   # (S, 2)
+    chain, chunk_key = splits[:, 0], splits[:, 1]
+    keys = jax.vmap(lambda k: jax.random.split(k, chunk_steps))(chunk_key)
+
+    def step_slot(ps, key_i, x_t_i, sign_i, row):
+        return _step_packed_core(ps, key_i, x_t_i, sign_i, row, d=d,
+                                 block_size=block_size, project=project,
+                                 backend=backend)
+
+    def body(i, st):
+        ps = PackedState(w=st.w, log_lam=st.log_lam,
+                         log_lam_prev=st.log_lam_prev, u=st.u, t=st.t)
+        new = jax.vmap(step_slot)(ps, keys[:, i], x_t, sign, sp)
+        do = st.active & (st.t < st.max_t)           # (S,)
+        sel = lambda n, o: jnp.where(
+            do.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+        return st._replace(
+            w=sel(new.w, st.w), log_lam=sel(new.log_lam, st.log_lam),
+            log_lam_prev=sel(new.log_lam_prev, st.log_lam_prev),
+            u=sel(new.u, st.u), t=sel(new.t, st.t))
+
+    state = jax.lax.fori_loop(0, num_steps, body, state)
+    state = state._replace(key=chain)
+
+    obj = jax.vmap(objective_from_duals)(state.log_lam, x_t, sign)
+
+    done = state.t >= state.max_t
+    if check_gap:
+        gap = jax.vmap(saddle_gap_packed)(state.w, x_t, sign, sp.nu)
+        converged = (sp.gap_tol > 0) & (
+            obj - gap <= sp.gap_tol * jnp.maximum(obj, 1e-12))
+        done = done | converged
+    return state._replace(active=state.active & ~done), obj
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk_steps", "d", "block_size",
+                                    "project", "check_gap", "backend"),
+                   donate_argnums=(0,))
+def run_chunk_slots(state: SlotState, x_t: jax.Array, sign: jax.Array,
+                    sp: SlotParams, num_steps, *, chunk_steps: int,
+                    d: int, block_size: int, project: bool,
+                    check_gap: bool = False, backend: str = "jnp"):
+    """Jitted slot-batched chunk: slot-state buffers donated (updated in
+    place), per-slot objectives returned as a device vector.  One
+    compile serves every chunk length up to ``chunk_steps`` and every
+    admission pattern -- the data buffers (``x_t``, ``sign``) and the
+    per-slot SlotParams are plain dynamic arguments."""
+    return chunk_body_slots(state, x_t, sign, sp, num_steps,
+                            chunk_steps=chunk_steps, d=d,
+                            block_size=block_size, project=project,
+                            check_gap=check_gap, backend=backend)
 
 
 def drive(state, key, num_iters: int, chunk: int, run) -> tuple:

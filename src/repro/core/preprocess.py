@@ -65,6 +65,28 @@ def packed_length(n: int, lane: int = LANE) -> int:
     return max(-(-n // lane), 1) * lane
 
 
+def bucket_length(n: int, lane: int = LANE) -> int:
+    """The pow-2 BUCKET ladder for the point axis: ``lane * 2^k``
+    (128, 256, 512, 1024, ...), the smallest rung >= n.
+
+    Where :func:`packed_length` pads to the next lane multiple (tight,
+    one executable per distinct multiple), the bucket ladder trades at
+    most 2x padding for O(log n) distinct shapes -- the multi-tenant
+    serving layer compiles ONE slot-batched executable per rung and
+    every request whose n lands in the rung shares it."""
+    return lane * next_pow2(max(-(-n // lane), 1))
+
+
+def bucket_shape(n: int, d: int) -> tuple[int, int]:
+    """(n_bucket, d_bucket) for a problem with n points in d dims: the
+    pow-2 point-axis rung and the pow-2 coordinate count (d is already
+    a power of two after :func:`preprocess`, so the d rung is the
+    identity on preprocessed problems; :func:`pack_points_to` can pad
+    d further for callers sharing one executable across
+    dimensionalities)."""
+    return bucket_length(n), next_pow2(d)
+
+
 class PackedPoints(NamedTuple):
     """Both classes packed into ONE lane-padded operand (the single-sweep
     engine's view of the data; see :mod:`repro.core.engine`).
@@ -121,6 +143,33 @@ def pack_points(xp: jax.Array, xm: jax.Array,
                          f"lane width {LANE}")
     x_t, sign = _pack(xp, xm, n_pad)
     return PackedPoints(x_t=x_t, sign=sign, n1=n1, n2=n2)
+
+
+def pack_points_to(xp: jax.Array, xm: jax.Array, n_pad: int,
+                   d_pad: int) -> PackedPoints:
+    """BUCKETED packing: pack into an exact (d_pad, n_pad) target shape
+    so every problem assigned to the same bucket shares one compiled
+    executable (see :func:`bucket_shape`).
+
+    Beyond :func:`pack_points`' lane padding of the point axis, the
+    COORDINATE axis is zero-padded to ``d_pad``: padding coordinates
+    are all-zero rows of ``x_t``, so a sampled block touching them
+    contributes exactly 0 to every dot product and the corresponding
+    ``w`` entries stay pinned at 0 (the update is w <- w / (sigma+1)
+    from w = 0).  The solver must be configured with d = d_pad so its
+    uniform coordinate sampling covers the padded axis -- that is what
+    makes a bucketed solve reproducible slot-for-slot against a solo
+    solve at the same bucket.
+    """
+    xp = jnp.asarray(xp, jnp.float32)
+    xm = jnp.asarray(xm, jnp.float32)
+    d = xp.shape[1]
+    if d_pad < d:
+        raise ValueError(f"d_pad={d_pad} < d={d}")
+    if d_pad > d:
+        xp = jnp.pad(xp, ((0, 0), (0, d_pad - d)))
+        xm = jnp.pad(xm, ((0, 0), (0, d_pad - d)))
+    return pack_points(xp, xm, pad_to=n_pad)
 
 
 class Preprocessed(NamedTuple):

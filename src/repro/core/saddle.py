@@ -106,6 +106,24 @@ def default_iterations(d: int, eps: float, beta: float,
     return int(2 * (d + math.sqrt(2.0 * d / (eps * beta)) * logn))
 
 
+def validate_nu(nu: float, n1: int, n2: int) -> None:
+    """The nu-SVM cap is feasible only when each class simplex can
+    absorb total mass 1: nu >= 1/min(n1, n2)."""
+    if nu > 0.0 and nu * min(n1, n2) < 1.0:
+        raise ValueError(
+            f"nu={nu} infeasible: need nu >= 1/min(n1,n2) = {1.0/min(n1,n2)}")
+
+
+def resolve_num_iters(num_iters: int | None, d: int, eps: float,
+                      beta: float, n: int, block_size: int) -> int:
+    """THE iteration-budget derivation (defaulting + block scaling),
+    shared by :func:`solve` and the serving layer so a request's
+    schedule cannot drift from a solo solve's."""
+    if num_iters is None:
+        num_iters = default_iterations(d, eps, beta, n)
+    return max(1, num_iters // block_size)
+
+
 def init_state(n1: int, n2: int, d: int,
                xp: jax.Array, xm: jax.Array) -> SaddleState:
     """Line 5 of Algorithm 1: w=0, eta=1/n1, xi=1/n2 (two copies)."""
@@ -198,6 +216,13 @@ def unpack_state(pstate: engine.PackedState, n1: int,
     return engine.unpack_state(pstate, n1, n2, SaddleState)
 
 
+# Default duality-gap checking cadence when gap_tol > 0 and the caller
+# gave no record_every: frequent enough to realize most of the early
+# stop's savings, coarse enough that the per-chunk host sync and gap
+# sort stay negligible against the chunk's iterations.
+GAP_CHECK_EVERY = 256
+
+
 class SolveResult(NamedTuple):
     state: SaddleState
     history: list            # [(iteration, objective)]
@@ -207,39 +232,77 @@ def solve(xp: jax.Array, xm: jax.Array, *, eps: float = 1e-3,
           beta: float = 0.1, nu: float = 0.0, num_iters: int | None = None,
           block_size: int = 1, seed: int = 0,
           record_every: int | None = None,
-          use_kernels: bool = False) -> SolveResult:
+          use_kernels: bool = False, n_pad: int | None = None,
+          d_pad: int | None = None, gap_tol: float = 0.0) -> SolveResult:
     """Run Saddle-SVC on (already preprocessed) data.
 
     Args:
       xp, xm: (n1, d), (n2, d) transformed point matrices.
       nu: 0 for hard margin; else the nu-SVM cap (must be >= 1/min(n1,n2)).
+      n_pad, d_pad: optional BUCKET shape (see preprocess.bucket_shape):
+        pad the packed point axis to n_pad and the coordinate axis to
+        d_pad so the solve is slot-for-slot reproducible against the
+        multi-tenant serving engine running the same bucket.  Padding
+        coordinates are inert (w stays 0 there) but DO change the
+        block-sampling schedule, which is exactly what sharing a
+        bucket's executable requires.
+      gap_tol: relative duality-gap early stop -- terminate once
+        (objective - saddle_gap) <= gap_tol * objective, checked at
+        chunk boundaries.  0 disables (the default: fixed iteration
+        budget, reproducible schedule).  With gap_tol > 0 and no
+        record_every, the chunk defaults to GAP_CHECK_EVERY iterations
+        so the check actually fires before the budget is spent.
 
-    All chunks share ONE executable (the chunk's trip count is dynamic,
-    so the final partial chunk neither recompiles nor executes padded
-    steps) and the objective history stays on device until a single
-    transfer at the end.
+    The hot loop is the SLOT-BATCHED engine driver at S=1 (one engine
+    serves the serial solver and the multi-tenant service; the unpacked
+    ``engine.step`` remains the parity oracle).  All chunks share ONE
+    executable (the chunk's trip count is dynamic, so the final partial
+    chunk neither recompiles nor executes padded steps) and the
+    objective history stays on device until a single transfer at the
+    end.
     """
+    import numpy as np
+
     n1, d = xp.shape
     n2 = xm.shape[0]
-    if nu > 0.0 and nu * min(n1, n2) < 1.0:
-        raise ValueError(
-            f"nu={nu} infeasible: need nu >= 1/min(n1,n2) = {1.0/min(n1,n2)}")
+    validate_nu(nu, n1, n2)
+    if d_pad is not None:
+        d = d_pad
     params = make_params(n1 + n2, d, eps, beta, nu=nu, block_size=block_size)
-    if num_iters is None:
-        num_iters = default_iterations(d, eps, beta, n1 + n2)
-    num_iters = max(1, num_iters // block_size)
+    num_iters = resolve_num_iters(num_iters, d, eps, beta, n1 + n2,
+                                  block_size)
+    check_gap = gap_tol > 0.0
+    if record_every is None and check_gap:
+        record_every = GAP_CHECK_EVERY   # else the gap never fires
     chunk = min(record_every or num_iters, num_iters)
     backend = "pallas" if use_kernels else "jnp"
 
-    pts = pp.pack_points(xp, xm)
-    pstate = engine.init_packed_state(pts.sign, n1, n2, d)
+    pts = pp.pack_points_to(xp, xm, n_pad or pp.packed_length(n1 + n2), d)
+    sstate = engine.init_slot_state(1, pts.n_pad, d)
+    sstate = engine.admit_into_slot(
+        sstate, 0, engine.init_packed_state(pts.sign, n1, n2, d),
+        jax.random.key(seed), num_iters)
+    sp = jax.tree.map(lambda v: jnp.asarray(v)[None],
+                      engine.slot_params_row(params, gap_tol))
+    x_t_b, sign_b = pts.x_t[None], pts.sign[None]
 
-    def run(st, sub, ns):
-        return engine.run_chunk_packed(st, sub, pts.x_t, pts.sign, ns,
-                                       params=params, chunk_steps=chunk,
-                                       backend=backend)
-
-    pstate, history = engine.drive(pstate, jax.random.key(seed),
-                                   num_iters, chunk, run)
+    objs, marks = [], []
+    done = 0
+    while done < num_iters:
+        ns = min(chunk, num_iters - done)
+        sstate, obj = engine.run_chunk_slots(
+            sstate, x_t_b, sign_b, sp, ns, chunk_steps=chunk, d=d,
+            block_size=block_size, project=nu > 0.0, check_gap=check_gap,
+            backend=backend)
+        done += ns
+        objs.append(obj)
+        marks.append(done)
+        if check_gap and not bool(jax.device_get(sstate.active)[0]):
+            marks[-1] = int(jax.device_get(sstate.t)[0])  # gap stop
+            break
+    objs = [float(np.asarray(o)[0]) for o in jax.device_get(objs)]
+    pstate = engine.PackedState(
+        w=sstate.w[0], log_lam=sstate.log_lam[0],
+        log_lam_prev=sstate.log_lam_prev[0], u=sstate.u[0], t=sstate.t[0])
     return SolveResult(state=unpack_state(pstate, n1, n2),
-                       history=history)
+                       history=list(zip(marks, objs)))

@@ -1,2 +1,12 @@
-"""Serving runtime: prefill + batched single-token decode with
-per-family caches (KV / compressed-KV / ring / recurrent state)."""
+"""Serving runtime.
+
+Two serving surfaces share this package:
+
+* :mod:`repro.serve.engine` -- the LM path: prefill + batched
+  single-token decode with per-family caches (KV / compressed-KV /
+  ring / recurrent state), with pow-2 prompt-length bucketing so
+  varying prompt lengths do not retrace.
+* :mod:`repro.serve.solver_service` -- the SVM fit endpoint:
+  continuous batching of independent fit requests through the
+  slot-batched saddle engine (shape buckets + mid-run admission).
+"""

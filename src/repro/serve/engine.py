@@ -9,17 +9,43 @@ Cache layout comes from transformer.init_stack_cache; recurrent archs
 (xlstm, recurrentgemma) keep O(1) state instead of KV, sliding-window
 attention keeps a ring buffer of ``window`` entries -- these are what
 make long_500k sub-quadratic (DESIGN.md shape applicability).
+
+Prefill length bucketing
+------------------------
+
+``generate`` pads prompts RIGHT to a pow-2 length bucket and runs ONE
+jitted prefill per (bucket, max_len) instead of retracing per distinct
+prompt length (``trace_counts`` pins one-trace-after-warmup).  This is
+exact for full-attention caches (GQA, MLA):
+
+  * inside the prefill, causal masking means no real query ever
+    attends a pad key (pads sit at positions >= the true length);
+  * after the prefill, every cache ``index`` is REWOUND to the true
+    length, so decode masks the pad entries out (``k_pos < index + 1``)
+    and each decode write overwrites the next pad entry exactly when
+    its position would first become attendable.
+
+Ring-buffer (sliding-window), recurrent and encoder-decoder caches
+absorb prompt tokens order-dependently, so those configs fall back to
+the exact-length eager prefill (``_can_bucket``).
 """
 
 from __future__ import annotations
 
+import collections
 import functools
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.preprocess import next_pow2
 from repro.models import transformer as tf
+
+# Incremented at TRACE time inside the jitted bucketed prefill, keyed
+# (model, bucket length, max_len) -- counts XLA traces, not calls, so
+# tests can pin "two prompt lengths, one bucket, one compile".
+trace_counts: collections.Counter = collections.Counter()
 
 
 class ServeState(NamedTuple):
@@ -55,6 +81,53 @@ def decode_step(params, cfg, tokens, state: ServeState) -> ServeState:
                       pos=state.pos + 1)
 
 
+def prompt_bucket(s: int, min_bucket: int = 8) -> int:
+    """The pow-2 prompt-length ladder (8, 16, 32, ...): at most 2x pad,
+    O(log s) distinct prefill executables."""
+    return next_pow2(max(s, min_bucket))
+
+
+def _can_bucket(cfg) -> bool:
+    """Bucketed prefill is exact only for order-independent caches:
+    full-attention blocks with no sliding window, no recurrent state,
+    no encoder-decoder cross cache."""
+    return (all(kind == "attn" for kind in cfg.block_pattern)
+            and cfg.window == 0 and not cfg.is_encoder_decoder)
+
+
+def _rewind_cache_index(cache, true_len):
+    """Set every ``index`` leaf of the (nested dict/list) cache to the
+    TRUE prompt length, undoing the pad tokens' advance: decode then
+    writes at the true position and masks the pad entries out."""
+    if isinstance(cache, dict):
+        return {k: (jnp.full_like(v, true_len) if k == "index"
+                    else _rewind_cache_index(v, true_len))
+                for k, v in cache.items()}
+    if isinstance(cache, (list, tuple)):
+        return type(cache)(_rewind_cache_index(v, true_len)
+                           for v in cache)
+    return cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_len",
+                                             "cache_dtype"))
+def _prefill_bucketed(params, cfg, tokens, true_len, *, max_len: int,
+                      cache_dtype=jnp.bfloat16) -> ServeState:
+    """Jitted bucket-shaped prefill: ``tokens`` is (B, s_bucket) with
+    pad ids right of ``true_len`` (a traced scalar, so one executable
+    serves every true length in the bucket)."""
+    trace_counts[(cfg.name, tokens.shape[1], max_len)] += 1  # trace time
+    b, s_b = tokens.shape
+    cache = init_cache(cfg, b, max_len, cache_dtype)
+    logits, cache, _ = tf.forward(params, cfg, tokens, cache=cache,
+                                  pos_offset=jnp.zeros((), jnp.int32))
+    cache = _rewind_cache_index(cache, true_len)
+    last = jax.lax.dynamic_index_in_dim(logits, true_len - 1, axis=1,
+                                        keepdims=False)
+    return ServeState(cache=cache, last_logits=last,
+                      pos=jnp.asarray(true_len, jnp.int32))
+
+
 def sample(logits, key, temperature: float = 0.0):
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1)
@@ -83,13 +156,37 @@ def _decode_loop(params, cfg, state: ServeState, key, steps: int,
 def generate(params, cfg, prompt_tokens, *, steps: int,
              temperature: float = 0.0, seed: int = 0,
              enc_frames=None, vision_embeds=None, vision_mask=None,
-             max_len: int | None = None):
-    """Batched generation; returns (B, steps) generated token ids."""
+             max_len: int | None = None, bucket_prompts: bool = True):
+    """Batched generation; returns (B, steps) generated token ids.
+
+    Prompts are padded to the pow-2 length bucket and prefilled through
+    ONE jitted executable per bucket (exact -- see the module
+    docstring) whenever the cache family allows it; ring-buffer,
+    recurrent, encoder-decoder and vision-conditioned calls fall back
+    to the exact-length prefill.  The default ``max_len`` becomes
+    s_bucket + steps -- stable across all prompt lengths in a bucket,
+    so the decode executable is shared too."""
     b, s = prompt_tokens.shape
-    max_len = max_len or (s + steps)
-    state = prefill(params, cfg, prompt_tokens, max_len=max_len,
-                    enc_frames=enc_frames, vision_embeds=vision_embeds,
-                    vision_mask=vision_mask)
+    s_b = prompt_bucket(s)
+    if (bucket_prompts and _can_bucket(cfg) and enc_frames is None
+            and vision_embeds is None
+            # an explicit max_len smaller than the bucket cannot hold
+            # the padded prompt -- honor it via the exact-length path
+            and (max_len is None or max_len >= s_b)):
+        # s_b + steps is already stable across every prompt length in
+        # the bucket (both are executable keys), so no further pow-2
+        # rounding: the cache stays as tight as bucketing allows
+        max_len = max_len or (s_b + steps)
+        toks = jnp.pad(prompt_tokens, ((0, 0), (0, s_b - s)))
+        state = _prefill_bucketed(params, cfg, toks,
+                                  jnp.asarray(s, jnp.int32),
+                                  max_len=max_len)
+    else:
+        max_len = max_len or (s + steps)
+        state = prefill(params, cfg, prompt_tokens, max_len=max_len,
+                        enc_frames=enc_frames,
+                        vision_embeds=vision_embeds,
+                        vision_mask=vision_mask)
     _, toks = _decode_loop(params, cfg, state, jax.random.key(seed),
                            steps, temperature)
     return toks

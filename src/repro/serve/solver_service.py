@@ -1,0 +1,390 @@
+"""Multi-tenant SVM fit serving: continuous batching over the
+slot-batched saddle engine.
+
+The paper's per-iteration work is tiny -- O(B + n) after preprocessing
+(Theorem 6) -- so a single fit request cannot saturate the hardware.
+At serving scale the unit of work is therefore MANY independent small
+problems, not one large one: this service packs S concurrent fit
+requests into ONE compiled slot-batched step
+(:func:`repro.core.engine.run_chunk_slots`, a ``vmap`` over the
+leading slot axis) and keeps that executable busy by admitting queued
+requests into lanes as they free up mid-run.
+
+Shape buckets
+-------------
+
+One executable serves exactly one (n_bucket, d_bucket) shape.  To keep
+the number of distinct executables logarithmic in problem size,
+requests are packed onto a POW-2 BUCKET LADDER
+(:func:`repro.core.preprocess.bucket_shape`):
+
+  * point axis: ``LANE * 2^k``  (128, 256, 512, ...) -- at most 2x
+    padding, each rung lane-aligned for the Pallas kernels;
+  * coordinate axis: ``2^k`` -- already satisfied by the WD transform
+    of Algorithm 1, so requests of different dimensionality simply
+    land on different d rungs (cross-d sharing via inert coordinate
+    padding is what ``saddle.solve(..., d_pad)`` /
+    ``preprocess.pack_points_to`` provide for callers that want it).
+
+Padding points carry sign 0 / log-weight NEG_INF (inert in every
+reduction); padding coordinates are all-zero rows of the column-major
+mirror, so ``w`` stays pinned at 0 there.  Because the solver samples
+coordinate blocks over the FULL bucket axis, a bucketed solve is
+reproducible slot-for-slot against ``saddle.solve(..., n_pad, d_pad)``
+at the same bucket -- that is the service's parity contract (tested in
+``tests/test_solver_service.py``).
+
+Slot lifecycle (see also :class:`repro.core.engine.SlotState`)
+--------------------------------------------------------------
+
+  queue -> ADMIT -> RUNNING -> FINISHED -> harvest -> (lane FREE)
+
+  * ADMIT (between chunks only): :func:`engine.admit_into_slot`
+    overwrites EVERY per-slot field -- state, PRNG chain, budget,
+    active flag -- so a reused lane cannot leak its previous
+    occupant's duals; the request's packed operand is written into the
+    batch buffers by a donated updater (in-place, no reallocation).
+  * RUNNING: the slot steps while ``t < max_t`` and (if the request
+    set ``gap_tol``) its relative duality gap is above threshold.
+    The per-slot active mask freezes finished slots WITHOUT halting
+    the batch.
+  * FINISHED -> harvest: the host reads the (S,) active/t vectors
+    after each chunk, extracts finished slots, and recovers each
+    request's input-space (w, b) via the exact ``svm.py`` path
+    (:func:`repro.core.svm.recover_hyperplane`).
+
+Compile discipline
+------------------
+
+The chunk executable is keyed by (S, bucket shape, block size,
+chunk_steps, project, check_gap, backend) -- all admission patterns,
+chunk lengths and per-request parameter VALUES share it.  The service
+tracks trace counts per key (``engine.trace_counts``); after a bucket
+is warm, every chunk must be a compile-cache hit
+(``SolverService.stats`` is asserted in ``benchmarks/serve_bench.py``).
+"""
+
+from __future__ import annotations
+
+import collections
+import functools
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.core import preprocess as pp
+from repro.core import saddle
+from repro.core import svm as svm_mod
+
+
+@dataclass
+class FitRequest:
+    """One SVM fit: raw (x, y) plus the solver configuration a
+    ``SaddleSVC``/``SaddleNuSVC`` would take.  ``nu=0`` is hard margin.
+    ``gap_tol > 0`` enables the per-slot duality-gap early stop (the
+    request may then finish before ``num_iters``)."""
+    x: np.ndarray
+    y: np.ndarray
+    eps: float = 1e-3
+    beta: float = 0.1
+    nu: float = 0.0
+    num_iters: int | None = None
+    block_size: int = 1
+    seed: int = 0
+    gap_tol: float = 0.0
+
+
+class FitResult(NamedTuple):
+    """Input-space hyperplane (the ``svm.py`` recovery path) plus the
+    serving metadata of the request's ride through the batch."""
+    request_id: int
+    w: np.ndarray
+    b: float
+    objective: float
+    margin: float
+    iterations: int          # iterations actually run (gap stop <= budget)
+    bucket: tuple            # (n_bucket, d_bucket) the request shared
+    history: list            # [(iteration, objective)] at chunk marks
+
+
+class _Slot(NamedTuple):
+    """Host-side bookkeeping for one RUNNING lane."""
+    request_id: int
+    req: FitRequest
+    pre: Any                 # Preprocessed (transform to undo at harvest)
+    xp_t: jax.Array          # transformed + bucket-padded class matrices
+    xm_t: jax.Array
+    history: list
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _write_slot_data(x_t_b, sign_b, slot, x_t, sign):
+    """Write one request's packed operand into lane ``slot`` of the
+    batch buffers.  Donated: the (S, d, n) buffer is updated in place,
+    and ``slot`` is traced so one compile serves every lane."""
+    return x_t_b.at[slot].set(x_t), sign_b.at[slot].set(sign)
+
+
+class _Batch:
+    """One bucket's slot table: device buffers + host slot metadata.
+
+    ``project``/``check_gap`` are FIXED at batch creation (hard-margin
+    and nu-SVM requests live in separate batches): a request's
+    executable -- and therefore its numeric trajectory -- is fully
+    determined by the request itself, never by which co-tenants happen
+    to share its bucket at admission time."""
+
+    def __init__(self, bucket: tuple[int, int], num_slots: int,
+                 project: bool, check_gap: bool):
+        n_pad, d_pad = bucket
+        self.bucket = bucket
+        self.project = project
+        self.check_gap = check_gap
+        self.state = engine.init_slot_state(num_slots, n_pad, d_pad)
+        self.x_t = jnp.zeros((num_slots, d_pad, n_pad), jnp.float32)
+        self.sign = jnp.zeros((num_slots, n_pad), jnp.float32)
+        self.sp = jax.tree.map(
+            lambda v: np.repeat(np.asarray(v, np.float32), num_slots),
+            engine.SlotParams(theta=0.0, sigma=0.0, inv_sig1=1.0,
+                              gamma=1.0, tau=1.0, mwu_c=1.0, mwu_dot=1.0,
+                              nu=1.0, gap_tol=0.0))
+        self.sp_dev = None                      # device mirror of sp
+        self.slots: dict[int, _Slot] = {}       # lane -> running request
+        self.queue: collections.deque[tuple[int, FitRequest]] = \
+            collections.deque()
+
+    def free_lanes(self, num_slots: int):
+        return [i for i in range(num_slots) if i not in self.slots]
+
+    def has_work(self) -> bool:
+        return bool(self.slots or self.queue)
+
+
+class SolverService:
+    """Continuous-batching fit endpoint over the slot-batched engine.
+
+    ``submit`` enqueues a request (assigning it a ticket id); ``step``
+    runs ONE chunk of one bucket's batch -- admitting queued requests
+    into free lanes first, harvesting finished slots after -- and
+    returns any completed :class:`FitResult`s; ``run`` drains
+    everything.  ``fit`` is the one-shot convenience wrapper.
+
+    The service is deliberately host-driven between chunks (admission
+    and harvest are O(S) scalar decisions); all per-iteration work
+    stays inside the one compiled chunk per bucket.
+    """
+
+    def __init__(self, num_slots: int = 8, chunk_steps: int = 64,
+                 backend: str = "jnp"):
+        self.num_slots = num_slots
+        self.chunk_steps = chunk_steps
+        self.backend = backend
+        self._batches: dict[tuple, _Batch] = {}
+        self._results: dict[int, FitResult] = {}
+        self._pre_cache: dict[int, Any] = {}
+        self._next_id = 0
+        self._rr = 0               # round-robin cursor over batches
+        # compile-cache accounting: compiles are counted by observing
+        # the trace-count delta around OUR OWN chunk dispatches, so
+        # traces by other services / solo solves sharing an executable
+        # key are never attributed to this service
+        self.chunk_calls: collections.Counter = collections.Counter()
+        self._compiles = 0
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: FitRequest) -> int:
+        """Validate, preprocess and enqueue a fit request; returns its
+        ticket id.  The heavy per-request work here (split, WD
+        transform, bucket packing) is exactly Algorithm 1 --
+        preprocessing is NOT the serving bottleneck the slot engine
+        addresses, so it runs at intake."""
+        rid = self._next_id
+        self._next_id += 1
+        xp, xm = svm_mod.split_classes(req.x, req.y)   # raises on 1 class
+        n1, n2 = len(xp), len(xm)
+        saddle.validate_nu(req.nu, n1, n2)
+        k_pre, _ = jax.random.split(jax.random.key(req.seed))
+        pre = pp.preprocess(xp, xm, k_pre)
+        d_pre = pre.xp.shape[1]
+        bucket = pp.bucket_shape(n1 + n2, d_pre)
+        # everything that keys the compiled chunk also keys the batch:
+        # block_size (shape), project (nu>0) and check_gap (gap_tol>0)
+        # statics -- so co-tenancy can never change a request's
+        # executable and the warm-up set is exactly the batch set
+        project = req.nu > 0.0
+        check_gap = req.gap_tol > 0.0
+        batch_key = bucket + (req.block_size, project, check_gap)
+        batch = self._batches.get(batch_key)
+        if batch is None:
+            batch = self._batches[batch_key] = _Batch(
+                bucket, self.num_slots, project, check_gap)
+        batch.queue.append((rid, req))
+        self._pre_cache[rid] = pre
+        return rid
+
+    # --------------------------------------------------------- admission
+    def _admit(self, batch: _Batch) -> None:
+        """Fill free lanes from the bucket's queue (between chunks)."""
+        n_pad, d_pad = batch.bucket
+        for lane in batch.free_lanes(self.num_slots):
+            if not batch.queue:
+                break
+            rid, req = batch.queue.popleft()
+            pre = self._pre_cache.pop(rid)
+            xp_t, xm_t = pre.xp, pre.xm
+            # preprocess() already padded d to a power of two, so the
+            # request's dimensionality IS the batch's d rung
+            assert xp_t.shape[1] == d_pad, (xp_t.shape, batch.bucket)
+            n1, n2 = xp_t.shape[0], xm_t.shape[0]
+            pts = pp.pack_points(xp_t, xm_t, pad_to=n_pad)
+            params = saddle.make_params(
+                n1 + n2, d_pad, req.eps, req.beta, nu=req.nu,
+                block_size=req.block_size)
+            # the SAME budget derivation as saddle.solve (shared
+            # helper), so a request's schedule equals its solo solve's
+            num_iters = saddle.resolve_num_iters(
+                req.num_iters, d_pad, req.eps, req.beta, n1 + n2,
+                req.block_size)
+
+            batch.x_t, batch.sign = _write_slot_data(
+                batch.x_t, batch.sign, lane, pts.x_t, pts.sign)
+            batch.state = engine.admit_into_slot(
+                batch.state, lane,
+                engine.init_packed_state(pts.sign, n1, n2, d_pad),
+                jax.random.key(req.seed), num_iters)
+            row = engine.slot_params_row(params, req.gap_tol)
+            for f in engine.SlotParams._fields:
+                getattr(batch.sp, f)[lane] = getattr(row, f)
+            batch.sp_dev = None                 # refresh device mirror
+            batch.slots[lane] = _Slot(request_id=rid, req=req, pre=pre,
+                                      xp_t=xp_t, xm_t=xm_t, history=[])
+
+    # ----------------------------------------------------------- harvest
+    def _harvest(self, batch: _Batch, obj) -> list[FitResult]:
+        """Record per-slot history, extract every FINISHED slot through
+        the svm.py recovery path, and free its lane."""
+        # ONE blocking transfer per chunk for all (S,)-sized lifecycle
+        # vectors; the big per-slot state only moves for finished slots
+        active, t, obj = map(np.asarray, jax.device_get(
+            (batch.state.active, batch.state.t, obj)))
+        out = []
+        for lane, slot in list(batch.slots.items()):
+            slot.history.append((int(t[lane]), float(obj[lane])))
+            if active[lane]:
+                continue
+            lam = np.asarray(jax.device_get(batch.state.log_lam[lane]))
+            n1 = slot.xp_t.shape[0]
+            n2 = slot.xm_t.shape[0]
+            eta = jnp.exp(jnp.asarray(lam[:n1]))
+            xi = jnp.exp(jnp.asarray(lam[n1:n1 + n2]))
+            w, b, objective, margin, _ = svm_mod.recover_hyperplane(
+                slot.pre, eta, xi, slot.xp_t, slot.xm_t)
+            res = FitResult(request_id=slot.request_id, w=w, b=b,
+                            objective=objective, margin=margin,
+                            iterations=int(t[lane]), bucket=batch.bucket,
+                            history=slot.history)
+            self._results[slot.request_id] = res
+            out.append(res)
+            del batch.slots[lane]
+        return out
+
+    # -------------------------------------------------------------- run
+    def _pick_batch(self) -> _Batch | None:
+        """Round-robin over batches with work: the cursor advances past
+        the chosen batch, so a continuously-fed bucket cannot starve
+        the others."""
+        batches = list(self._batches.values())
+        for i in range(len(batches)):
+            j = (self._rr + i) % len(batches)
+            if batches[j].has_work():
+                self._rr = j + 1
+                return batches[j]
+        return None
+
+    def _evict_idle(self, batch: _Batch) -> None:
+        """Drop a drained batch: its device buffers (slot state + the
+        (S, d, n) operand) are per-batch, so holding every bucket ever
+        seen would leak device memory across varied request shapes.
+        The COMPILED executable survives in the jit cache regardless --
+        re-creating a batch later costs one allocation, not a trace."""
+        if not batch.has_work():
+            for k, v in list(self._batches.items()):
+                if v is batch:
+                    del self._batches[k]
+
+    def step(self) -> list[FitResult]:
+        """One scheduling round: admit -> one chunk -> harvest.
+        Returns the requests that finished this round."""
+        batch = self._pick_batch()
+        if batch is None:
+            return []
+        self._admit(batch)
+        if not batch.slots:
+            return []
+        n_pad, d_pad = batch.bucket
+        project, check_gap = batch.project, batch.check_gap
+        block_size = next(iter(batch.slots.values())).req.block_size
+        key = engine.slot_trace_key(self.num_slots, n_pad, d_pad,
+                                    block_size, self.chunk_steps,
+                                    project, check_gap, self.backend)
+        self.chunk_calls[key] += 1
+        traces_before = engine.trace_counts.get(key, 0)
+        # Always run FULL chunks: a slot near its budget is frozen by
+        # the per-slot mask at exactly max_t, which keeps every slot's
+        # chunk/key schedule identical to a solo solve with
+        # record_every == chunk_steps (the parity contract).  A
+        # shortened trip count here would give a mid-run-admitted slot
+        # a partial FIRST chunk no solo schedule ever takes.
+        if batch.sp_dev is None:
+            batch.sp_dev = jax.tree.map(jnp.asarray, batch.sp)
+        batch.state, obj = engine.run_chunk_slots(
+            batch.state, batch.x_t, batch.sign, batch.sp_dev,
+            self.chunk_steps,
+            chunk_steps=self.chunk_steps, d=d_pad, block_size=block_size,
+            project=project, check_gap=check_gap, backend=self.backend)
+        self._compiles += engine.trace_counts.get(key, 0) - traces_before
+        out = self._harvest(batch, obj)
+        self._evict_idle(batch)
+        return out
+
+    def run(self) -> dict[int, FitResult]:
+        """Drain every queue; returns (and RELEASES) every result
+        completed since the last drain -- results are not retained
+        service-side, so a long-running service stays O(active slots),
+        not O(requests served)."""
+        while any(b.has_work() for b in self._batches.values()):
+            self.step()
+        out, self._results = self._results, {}
+        return out
+
+    def result(self, rid: int) -> FitResult:
+        """Pop one completed result (KeyError if not finished yet)."""
+        return self._results.pop(rid)
+
+    def fit(self, x, y, **kw) -> FitResult:
+        """One-shot convenience: submit + drain (still exercises the
+        full slot path, S=1 occupancy).  Other requests completed by
+        the drain stay claimable via ``result()``."""
+        rid = self.submit(FitRequest(x=x, y=y, **kw))
+        out = self.run()
+        res = out.pop(rid)
+        self._results.update(out)      # keep co-drained results claimable
+        return res
+
+    # ------------------------------------------------------------- stats
+    @property
+    def stats(self) -> dict:
+        """Compile-cache accounting: ``compiles`` counts the traces
+        observed during THIS service's chunk dispatches (trace-count
+        delta around each call -- other services or solo solves
+        sharing an executable key are never misattributed),
+        ``cache_hits`` the chunk calls served without tracing.  After
+        warm-up every call must be a hit (asserted by the serve
+        bench)."""
+        calls = sum(self.chunk_calls.values())
+        return {"chunk_calls": calls, "compiles": self._compiles,
+                "cache_hits": calls - self._compiles}

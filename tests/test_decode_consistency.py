@@ -68,6 +68,53 @@ def test_swa_ring_wraparound():
     assert np.abs(got - want).max() / (np.abs(want).max() + 1e-9) < 1e-4
 
 
+@pytest.mark.parametrize("arch", ["gemma-7b", "deepseek-v2-lite-16b"])
+def test_prefill_bucketing_exact_and_single_trace(arch):
+    """Prompts of different lengths inside one pow-2 bucket must (a)
+    generate EXACTLY the tokens of the unbucketed path -- right-pad +
+    causal mask + index rewind is exact for full-attention caches --
+    and (b) share ONE prefill trace (engine.trace_counts)."""
+    cfg = get_config(arch).reduced()
+    params = tf.init_lm(jax.random.key(0), cfg)
+    assert engine._can_bucket(cfg)
+    snap = dict(engine.trace_counts)
+    for s in (5, 7):                        # both bucket to 8
+        prompt = jax.random.randint(jax.random.key(s), (2, s), 0,
+                                    cfg.vocab_size)
+        a = engine.generate(params, cfg, prompt, steps=4)
+        b = engine.generate(params, cfg, prompt, steps=4,
+                            bucket_prompts=False)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    delta = {k: v - snap.get(k, 0)
+             for k, v in engine.trace_counts.items()
+             if v != snap.get(k, 0)}
+    assert delta == {(cfg.name, 8, 8 + 4): 1}, delta
+
+
+def test_explicit_small_max_len_falls_back_to_exact_prefill():
+    """An explicit max_len below the prompt's pow-2 bucket was always a
+    valid call (max_len >= s + steps); it must keep working by routing
+    through the exact-length prefill instead of crashing on a
+    bucket-sized cache write."""
+    cfg = get_config("gemma-7b").reduced()
+    params = tf.init_lm(jax.random.key(0), cfg)
+    prompt = jax.random.randint(jax.random.key(4), (1, 5), 0,
+                                cfg.vocab_size)
+    a = engine.generate(params, cfg, prompt, steps=2, max_len=7)
+    b = engine.generate(params, cfg, prompt, steps=2,
+                        bucket_prompts=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bucketing_gate_excludes_order_dependent_caches():
+    """SWA ring buffers and recurrent state absorb prompts
+    order-dependently: those configs must fall back to exact-length
+    prefill."""
+    assert not engine._can_bucket(get_config("h2o-danube-1.8b").reduced())
+    assert not engine._can_bucket(get_config("xlstm-125m").reduced())
+    assert not engine._can_bucket(get_config("whisper-medium").reduced())
+
+
 def test_generate_greedy_deterministic():
     cfg = get_config("h2o-danube-1.8b").reduced()
     params = tf.init_lm(jax.random.key(0), cfg)

@@ -307,7 +307,10 @@ def test_run_chunk_compiles_once_with_partial_final_chunk(problem):
     res = saddle.solve(xp, xm, num_iters=250, record_every=97)
     delta = {k: v - snap.get(k, 0) for k, v in engine.trace_counts.items()
              if v != snap.get(k, 0)}
-    assert delta == {("packed", None, "jnp", 97): 1}, delta
+    n_pad = pp.packed_length(xp.shape[0] + xm.shape[0])
+    want = engine.slot_trace_key(1, n_pad, xp.shape[1], 1, 97,
+                                 False, False, "jnp")
+    assert delta == {want: 1}, delta
     assert [h[0] for h in res.history] == [97, 194, 250]
     # the partial chunk really ran only 56 steps
     assert int(res.state.t) == 250

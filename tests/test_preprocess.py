@@ -66,3 +66,50 @@ def test_recover_direction_roundtrip():
     lhs = np.asarray(pre.xp) @ np.asarray(w_t)      # transformed space
     rhs = xp @ w_orig                               # original space
     np.testing.assert_allclose(lhs, rhs, atol=1e-4)
+
+
+def test_bucket_ladder_pow2_rungs():
+    """bucket_length walks lane * 2^k; bucket_shape pairs it with the
+    pow-2 coordinate rung."""
+    assert [pp.bucket_length(n) for n in (1, 128, 129, 256, 300, 1000)] \
+        == [128, 128, 256, 256, 512, 1024]
+    assert pp.bucket_shape(90, 16) == (128, 16)
+    assert pp.bucket_shape(600, 20) == (1024, 32)
+    # the ladder never undershoots and pads at most 2x (above one lane)
+    for n in (129, 257, 900, 4097):
+        b = pp.bucket_length(n)
+        assert b >= n and b < 2 * n + pp.LANE
+
+
+def test_pack_points_to_pads_both_axes():
+    rng = np.random.default_rng(0)
+    xp = rng.normal(size=(9, 8)).astype(np.float32)
+    xm = rng.normal(size=(12, 8)).astype(np.float32)
+    pts = pp.pack_points_to(xp, xm, 256, 16)
+    assert pts.x_t.shape == (16, 256)
+    # real coordinates land unchanged; padding rows/slots are zero
+    np.testing.assert_array_equal(np.asarray(pts.x_t[:8, :9]), xp.T)
+    np.testing.assert_array_equal(np.asarray(pts.x_t[8:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(pts.x_t[:, 21:]), 0.0)
+    sign = np.asarray(pts.sign)
+    assert (sign[:9] == 1).all() and (sign[9:21] == -1).all()
+    assert (sign[21:] == 0).all()
+    import pytest
+    with pytest.raises(ValueError):
+        pp.pack_points_to(xp, xm, 256, 4)          # d_pad < d
+
+
+def test_bucketed_solve_matches_plain_optimum():
+    """Bucket padding (extra points AND extra coordinates) must not
+    move the optimum: padding coordinates stay inert (w == 0 there)."""
+    from repro.core import saddle
+    rng = np.random.default_rng(3)
+    xp = rng.normal(size=(20, 8)).astype(np.float32) * 0.2 + 0.3
+    xm = rng.normal(size=(25, 8)).astype(np.float32) * 0.2 - 0.3
+    plain = saddle.solve(xp, xm, num_iters=3000)
+    # double the budget for the bucketed run: half its uniform
+    # coordinate draws land on the 8 dead padding coordinates
+    buck = saddle.solve(xp, xm, num_iters=6000, n_pad=256, d_pad=16)
+    w = np.asarray(buck.state.w)
+    np.testing.assert_array_equal(w[8:], 0.0)      # inert padding coords
+    assert abs(plain.history[-1][1] - buck.history[-1][1]) < 5e-3

@@ -66,6 +66,18 @@ def test_dual_iterates_feasible(small_problem):
     assert eta.max() <= nu + 1e-5 and xi.max() <= nu + 1e-5
 
 
+def test_gap_tol_stops_early_without_record_every(small_problem):
+    """gap_tol alone must actually fire: with no record_every the chunk
+    defaults to GAP_CHECK_EVERY so the duality-gap check runs before
+    the whole budget is spent."""
+    xp, xm = small_problem
+    res = saddle.solve(xp, xm, eps=1e-3, beta=0.1, num_iters=50000,
+                       gap_tol=0.5)
+    stopped_at = res.history[-1][0]
+    assert stopped_at < 50000
+    assert stopped_at == int(res.state.t)
+
+
 def test_kernel_backend_parity(small_problem):
     xp, xm = small_problem
     a = saddle.solve(xp, xm, num_iters=80)

@@ -1,0 +1,137 @@
+"""Continuous batching over the slot-batched solver engine: mid-run
+admission parity, slot-reuse isolation, gap early stop, compile-cache
+discipline (repro.serve.solver_service)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core import preprocess as pp
+from repro.core import saddle
+from repro.core.svm import recover_hyperplane, split_classes
+from repro.data import synthetic
+from repro.serve.solver_service import FitRequest, SolverService
+
+pytestmark = pytest.mark.serve
+
+C = 40      # service chunk length == solo record_every (parity contract)
+
+
+def _solo(x, y, seed, nu, num_iters):
+    """Reference: solo saddle.solve at the SAME bucket and chunk
+    schedule as the service, through the same svm.py recovery path."""
+    xp, xm = split_classes(x, y)
+    k_pre, _ = jax.random.split(jax.random.key(seed))
+    pre = pp.preprocess(xp, xm, k_pre)
+    n_b, d_b = pp.bucket_shape(len(xp) + len(xm), pre.xp.shape[1])
+    res = saddle.solve(pre.xp, pre.xm, nu=nu, num_iters=num_iters,
+                       record_every=C, seed=seed, n_pad=n_b, d_pad=d_b)
+    st = res.state
+    eta = np.exp(np.asarray(st.log_eta))
+    xi = np.exp(np.asarray(st.log_xi))
+    w, b, *_ = recover_hyperplane(pre, eta, xi, pre.xp, pre.xm)
+    return w, b
+
+
+@pytest.fixture(scope="module")
+def two_problems():
+    ds1 = synthetic.blobs(40, 50, 16, gap=1.2, spread=0.15, seed=0)
+    ds2 = synthetic.blobs(35, 45, 16, gap=0.8, spread=0.3, seed=2)
+    return ds1, ds2       # both land in the (128, 16) bucket
+
+
+@pytest.mark.parametrize("nu_frac", [0.0, 0.85])
+def test_midrun_admission_parity(two_problems, nu_frac):
+    """A request admitted into a PARTIALLY-BUSY batch mid-run must
+    return the same (w, b) as a solo saddle.solve at the same seed and
+    bucket -- for hard margin and nu-SVM."""
+    ds1, ds2 = two_problems
+    nu1 = nu_frac and 1.0 / (nu_frac * 40)
+    nu2 = nu_frac and 1.0 / (nu_frac * 35)
+    svc = SolverService(num_slots=4, chunk_steps=C)
+    rid1 = svc.submit(FitRequest(x=ds1.x, y=ds1.y, num_iters=6 * C,
+                                 seed=1, nu=nu1))
+    assert svc.step() == []               # chunk 1: only request 1 runs
+    rid2 = svc.submit(FitRequest(x=ds2.x, y=ds2.y, num_iters=3 * C,
+                                 seed=9, nu=nu2))
+    results = svc.run()
+    for rid, ds, seed, nu, iters in [(rid1, ds1, 1, nu1, 6 * C),
+                                     (rid2, ds2, 9, nu2, 3 * C)]:
+        w, b = _solo(ds.x, ds.y, seed, nu, iters)
+        np.testing.assert_allclose(results[rid].w, w, atol=1e-5)
+        np.testing.assert_allclose(results[rid].b, b, atol=1e-5)
+        assert results[rid].iterations == iters
+
+
+def test_freed_slot_reuse_leaks_no_state(two_problems):
+    """A lane freed by a finished request and reused by a NEW request
+    must behave exactly like a fresh lane: same (w, b) as solo."""
+    ds1, ds2 = two_problems
+    svc = SolverService(num_slots=1, chunk_steps=C)   # forces reuse
+    r1 = svc.fit(ds1.x, ds1.y, num_iters=2 * C, seed=11)
+    r2 = svc.fit(ds2.x, ds2.y, num_iters=2 * C, seed=12)
+    w2, b2 = _solo(ds2.x, ds2.y, 12, 0.0, 2 * C)
+    np.testing.assert_allclose(r2.w, w2, atol=1e-5)
+    np.testing.assert_allclose(r2.b, b2, atol=1e-5)
+    # ...and the first occupant was not disturbed either
+    w1, b1 = _solo(ds1.x, ds1.y, 11, 0.0, 2 * C)
+    np.testing.assert_allclose(r1.w, w1, atol=1e-5)
+    # reuse rode the warm executable: at most one compile for the whole
+    # session (ZERO when a solo solve already warmed the key -- an S=1
+    # service shares saddle.solve's executable, the "one engine" goal)
+    assert svc.stats["compiles"] <= 1
+    assert svc.stats["cache_hits"] >= svc.stats["chunk_calls"] - 1
+
+
+def test_slot_batched_equals_sequential_batch(two_problems):
+    """S requests solved CONCURRENTLY (one slot-batched executable)
+    equal the same requests solved one at a time."""
+    ds1, ds2 = two_problems
+    svc = SolverService(num_slots=4, chunk_steps=C)
+    rids = [svc.submit(FitRequest(x=ds.x, y=ds.y, num_iters=3 * C,
+                                  seed=s))
+            for ds, s in [(ds1, 0), (ds2, 1), (ds1, 2), (ds2, 3)]]
+    results = svc.run()
+    for rid, (ds, s) in zip(rids, [(ds1, 0), (ds2, 1), (ds1, 2),
+                                   (ds2, 3)]):
+        w, b = _solo(ds.x, ds.y, s, 0.0, 3 * C)
+        np.testing.assert_allclose(results[rid].w, w, atol=1e-5)
+
+
+def test_gap_early_stop_frees_slot(two_problems):
+    """gap_tol > 0: an easy request converges and frees its lane well
+    before its iteration budget; the result is still a good fit."""
+    ds1, _ = two_problems
+    svc = SolverService(num_slots=2, chunk_steps=C)
+    res = svc.fit(ds1.x, ds1.y, num_iters=200 * C, seed=0, gap_tol=0.2)
+    assert res.iterations < 200 * C
+    acc = np.mean(np.where(ds1.x @ res.w - res.b >= 0, 1, -1) == ds1.y)
+    assert acc >= 0.95
+
+
+def test_fit_preserves_co_drained_results(two_problems):
+    """fit() drains the whole queue; results of OTHER requests
+    completed by that drain must stay claimable via result()."""
+    ds1, ds2 = two_problems
+    svc = SolverService(num_slots=2, chunk_steps=C)
+    rid1 = svc.submit(FitRequest(x=ds1.x, y=ds1.y, num_iters=C, seed=4))
+    r2 = svc.fit(ds2.x, ds2.y, num_iters=C, seed=5)
+    r1 = svc.result(rid1)                   # must not raise
+    assert r1.request_id == rid1 and r2.request_id != rid1
+    # batches drained -> their device buffers were evicted
+    assert not svc._batches
+
+
+def test_single_class_rejected_at_submit(two_problems):
+    ds1, _ = two_problems
+    svc = SolverService(num_slots=2, chunk_steps=C)
+    with pytest.raises(ValueError, match="both classes"):
+        svc.submit(FitRequest(x=ds1.x, y=np.ones(len(ds1.y))))
+
+
+def test_infeasible_nu_rejected_at_submit(two_problems):
+    ds1, _ = two_problems
+    svc = SolverService(num_slots=2, chunk_steps=C)
+    with pytest.raises(ValueError, match="infeasible"):
+        svc.submit(FitRequest(x=ds1.x, y=ds1.y, nu=1.0 / 200))

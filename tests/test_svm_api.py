@@ -1,8 +1,9 @@
 """High-level SaddleSVC / SaddleNuSVC behaviour (fit/predict/b offset)."""
 
 import numpy as np
+import pytest
 
-from repro.core.svm import SaddleNuSVC, SaddleSVC
+from repro.core.svm import SaddleNuSVC, SaddleSVC, split_classes
 
 
 def test_hard_margin_separable(blobs_separable):
@@ -48,3 +49,24 @@ def test_explicit_nu():
     ds = synthetic.blobs(30, 30, 8, gap=0.5, spread=0.4, seed=7)
     clf = SaddleNuSVC(nu=0.1, num_iters=3000).fit(ds.x, ds.y)
     assert clf.eta_.max() <= 0.1 + 1e-5
+
+
+def test_single_class_y_fails_fast():
+    """A single-class y must raise a clear ValueError up front, not a
+    shape blow-up inside pack_points."""
+    x = np.random.default_rng(0).normal(size=(20, 4)).astype(np.float32)
+    with pytest.raises(ValueError, match="both classes"):
+        split_classes(x, np.ones(20))
+    with pytest.raises(ValueError, match="both classes"):
+        SaddleSVC(num_iters=10).fit(x, -np.ones(20))
+
+
+def test_use_kernels_plumbed_through_fit(blobs_separable):
+    """fit(use_kernels=True) must reach the Pallas backend and agree
+    with the jnp backend (the engines are parity-tested; here we pin
+    that the FRONT END actually forwards the flag)."""
+    ds = blobs_separable
+    a = SaddleSVC(num_iters=400, seed=3).fit(ds.x, ds.y)
+    b = SaddleSVC(num_iters=400, seed=3, use_kernels=True).fit(ds.x, ds.y)
+    np.testing.assert_allclose(a.w_, b.w_, atol=1e-5)
+    np.testing.assert_allclose(a.b_, b.b_, atol=1e-5)
