@@ -1,0 +1,130 @@
+"""Continuous-batching LM serving throughput.
+
+Tokens/sec of the slot-granular LM service (repro.serve.lm_service) at
+S in {1, 2, 4} decode lanes against the sequential baseline -- the
+same R generation requests run one solo ``generate`` at a time.  The
+service's decode chunk is the solo single-token forward vmapped over
+lanes, so the delta is pure continuous batching: S sequences per
+compiled decode step amortize the per-token fixed costs (dispatch,
+sampling, cache bookkeeping) a single small decode cannot, and freed
+KV lanes are refilled MID-DECODE from the queue (staggered arrivals --
+the sequential loop cannot overlap requests at all).
+
+The model is deliberately tiny (a reduced full-attention config): like
+the solver bench's n=200 fits, small-model decode is the
+overhead-dominated regime continuous batching exists for.
+
+Also asserted here (hard, in both quick and full mode, mirroring
+serve_bench): ZERO recompiles after warm-up -- one decode-chunk
+executable plus one prefill per pow-2 prompt bucket, and the timed
+phase must be 100% compile-cache hits via the service's scheduler
+accounting AND a global serve-engine trace snapshot.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, emit_count
+from repro.configs import get_config
+from repro.models import transformer as tf
+from repro.serve import engine
+from repro.serve.lm_service import LMService
+
+ARCH = "gemma-7b"        # GQA full-attention cache: slot-mode eligible
+R = 6                    # requests per trial
+STEPS = 24               # generated tokens per request
+PROMPT_LENS = (5, 7, 12, 6, 11, 7)   # buckets 8 and 16 only
+MAX_LEN = 48
+CHUNK = 8
+
+
+def _setup():
+    cfg = get_config(ARCH).reduced()
+    params = tf.init_lm(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, s) for s in PROMPT_LENS]
+    return cfg, params, prompts
+
+
+def _seq_pass(cfg, params, prompts) -> float:
+    t0 = time.perf_counter()
+    for i, p in enumerate(prompts):
+        toks = engine.generate(params, cfg, jnp.asarray(p, jnp.int32)[None],
+                               steps=STEPS, seed=i, max_len=MAX_LEN)
+        jax.block_until_ready(toks)
+    return time.perf_counter() - t0
+
+
+def _svc_pass(cfg, params, prompts, num_slots: int):
+    """Staggered arrivals: half the requests are submitted up front,
+    the rest one per decode chunk -- every late request is admitted
+    into a freed (or still-free) lane MID-decode."""
+    svc = LMService(params, cfg, num_slots=num_slots, chunk_steps=CHUNK,
+                    max_len=MAX_LEN)
+    t0 = time.perf_counter()
+    late = list(enumerate(prompts))[R // 2:]
+    for i, p in list(enumerate(prompts))[:R // 2]:
+        svc.submit(p, steps=STEPS, seed=i)
+    while late:
+        svc.step()
+        i, p = late.pop(0)
+        svc.submit(p, steps=STEPS, seed=i)
+    svc.run()
+    return time.perf_counter() - t0, svc
+
+
+def run(quick: bool = True) -> None:
+    cfg, params, prompts = _setup()
+    reps = 2 if quick else 4
+    slots = (1, 2, 4)
+
+    # ---- warm-up: solo path + the service executables ---------------
+    _seq_pass(cfg, params, prompts)
+    for s in slots:
+        _svc_pass(cfg, params, prompts, s)
+    snap = dict(engine.trace_counts)
+
+    # ---- timed passes, interleaved (serve_bench discipline) ---------
+    t_seq = None
+    best: dict[int, float] = {}
+    lat: dict[int, dict] = {}
+    for _ in range(reps):
+        dt = _seq_pass(cfg, params, prompts)
+        t_seq = dt if t_seq is None else min(t_seq, dt)
+        for s in slots:
+            dt, svc = _svc_pass(cfg, params, prompts, s)
+            if s not in best or dt < best[s]:
+                best[s] = dt
+                lat[s] = svc.latency_percentiles(50.0, 95.0)
+            assert svc.stats["compiles"] == 0 and \
+                svc.stats["cache_hits"] == svc.stats["chunk_calls"], \
+                svc.stats
+    delta = {k: v - snap.get(k, 0) for k, v in engine.trace_counts.items()
+             if v != snap.get(k, 0)}
+    assert delta == {}, f"recompile after warm-up: {delta}"
+
+    toks = R * STEPS
+    emit("lm_serve/sequential_generate_loop", t_seq / toks,
+         f"arch={ARCH};steps={STEPS};R={R};tps={toks / t_seq:.1f}")
+    for s in slots:
+        emit(f"lm_serve/slots{s}", best[s] / toks,
+             f"tps={toks / best[s]:.1f};"
+             f"speedup={t_seq / best[s]:.2f}x;cache_hits=100%")
+        emit(f"lm_serve/slots{s}/latency_p50", lat[s][50.0],
+             "queue_to_result")
+        emit(f"lm_serve/slots{s}/latency_p95", lat[s][95.0],
+             "queue_to_result")
+    emit_count("lm_serve/recompiles_after_warmup", 0, "asserted_zero")
+    speedup = t_seq / best[max(slots)]
+    if speedup < 1.0:
+        # wall-clock ratios are load sensitive; quick/ci smoke warns
+        msg = (f"S={max(slots)} LM serving speedup {speedup:.2f}x < 1.0x "
+               f"(continuous batching should never lose to sequential)")
+        if not quick:
+            raise AssertionError(msg)
+        print(f"# WARNING: {msg}")

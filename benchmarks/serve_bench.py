@@ -13,6 +13,12 @@ per-iteration work is O(B + n) after preprocessing, so small fits are
 the overhead-dominated regime the service exists for (the motivation's
 "many independent instances as the unit of work").
 
+Besides requests/sec, the bench records per-request QUEUE-TO-RESULT
+latency percentiles (p50/p95, stamped by the scheduler at submit and
+release) for the default latency-aware policy AND the round-robin
+policy at S=8 -- so scheduler policies are comparable on tail latency,
+not just throughput, from `BENCH_serve.json`.
+
 Also asserted here (hard, in both quick and full mode): ZERO
 recompiles after bucket warm-up -- the timed phase must be 100%
 compile-cache hits, checked via the service's trace accounting AND a
@@ -52,14 +58,20 @@ def _seq_pass(reqs) -> float:
     return time.perf_counter() - t0
 
 
-def _svc_pass(reqs, num_slots: int):
-    svc = SolverService(num_slots=num_slots, chunk_steps=CHUNK)
+def _svc_pass(reqs, num_slots: int, policy: str = "oldest"):
+    svc = SolverService(num_slots=num_slots, chunk_steps=CHUNK,
+                        policy=policy)
     t0 = time.perf_counter()
     for ds, seed in reqs:
         svc.submit(FitRequest(x=ds.x, y=ds.y, seed=seed,
                               num_iters=ITERS))
     svc.run()
     return time.perf_counter() - t0, svc
+
+
+def _lat_pcts(svc) -> tuple[float, float]:
+    pcts = svc.latency_percentiles(50.0, 95.0)
+    return pcts[50.0], pcts[95.0]
 
 
 def run(quick: bool = True) -> None:
@@ -79,6 +91,7 @@ def run(quick: bool = True) -> None:
     t_seq = None
     best: dict[int, float] = {}
     stats: dict[int, dict] = {}
+    lat: dict[int, tuple[float, float]] = {}
     for _ in range(reps):
         dt = _seq_pass(reqs)
         t_seq = dt if t_seq is None else min(t_seq, dt)
@@ -86,10 +99,15 @@ def run(quick: bool = True) -> None:
             dt, svc = _svc_pass(reqs, s)
             if s not in best or dt < best[s]:
                 best[s] = dt
+                lat[s] = _lat_pcts(svc)
             assert svc.stats["compiles"] == 0 and \
                 svc.stats["cache_hits"] == svc.stats["chunk_calls"], \
                 svc.stats
             stats[s] = svc.stats
+    # policy comparison on tail latency: one round-robin pass at S=8
+    # (results are policy-invariant; only queue latency differs)
+    _, svc_rr = _svc_pass(reqs, 8, policy="round_robin")
+    assert svc_rr.stats["compiles"] == 0, svc_rr.stats
     delta = {k: v - snap.get(k, 0) for k, v in engine.trace_counts.items()
              if v != snap.get(k, 0)}
     assert delta == {}, f"recompile after bucket warm-up: {delta}"
@@ -100,6 +118,12 @@ def run(quick: bool = True) -> None:
         emit(f"serve/slots{s}", best[s] / R,
              f"rps={R / best[s]:.1f};speedup={t_seq / best[s]:.2f}x;"
              f"chunks={stats[s]['chunk_calls']};cache_hits=100%")
+        p50, p95 = lat[s]
+        emit(f"serve/slots{s}/latency_p50", p50, "queue_to_result;oldest")
+        emit(f"serve/slots{s}/latency_p95", p95, "queue_to_result;oldest")
+    p50, p95 = _lat_pcts(svc_rr)
+    emit("serve/slots8_rr/latency_p50", p50, "queue_to_result;round_robin")
+    emit("serve/slots8_rr/latency_p95", p95, "queue_to_result;round_robin")
     speedup8 = t_seq / best[8]
     emit_count("serve/recompiles_after_warmup", 0, "asserted_zero")
 

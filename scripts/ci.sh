@@ -31,11 +31,17 @@ case "$tier" in
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
       python -m benchmarks.theory_iters_comm --json BENCH_comm.json
     # serving smoke: continuous-batching throughput at S in {1,4,8}
-    # vs the sequential fit loop; FAILS on any recompile after bucket
+    # vs the sequential fit loop + queue-to-result latency percentiles
+    # per scheduler policy; FAILS on any recompile after bucket
     # warm-up (the speedup floor only warns in quick mode).
     # BENCH_serve.json is gitignored.
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
       python -m benchmarks.run --only serve --json BENCH_serve.json
+    # LM serving smoke: slot-granular decode with mid-decode admission
+    # vs the sequential generate loop; same zero-recompiles-after-
+    # warm-up hard assertion.  BENCH_lm_serve.json is gitignored.
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+      python -m benchmarks.run --only lm_serve --json BENCH_lm_serve.json
     ;;
   full) exec python -m pytest -q "$@" ;;
   *)    echo "usage: scripts/ci.sh [fast|full] [pytest args...]" >&2

@@ -1,12 +1,24 @@
 """Serving runtime.
 
-Two serving surfaces share this package:
+One scheduler, two workloads:
 
-* :mod:`repro.serve.engine` -- the LM path: prefill + batched
-  single-token decode with per-family caches (KV / compressed-KV /
-  ring / recurrent state), with pow-2 prompt-length bucketing so
-  varying prompt lengths do not retrace.
+* :mod:`repro.serve.scheduler` -- the workload-agnostic
+  continuous-batching core both services share: urgency-ordered
+  request queues (arrival / priority / deadline), per-group slot
+  tables, pluggable cross-group policy (latency-aware ``oldest``
+  default, ``round_robin`` bit-compat), admission into freed lanes,
+  idle eviction, queue-to-result latency stamps and compile-cache
+  accounting.
 * :mod:`repro.serve.solver_service` -- the SVM fit endpoint:
   continuous batching of independent fit requests through the
-  slot-batched saddle engine (shape buckets + mid-run admission).
+  slot-batched saddle engine (pow-2 shape buckets + mid-run
+  admission).
+* :mod:`repro.serve.lm_service` -- the LM generation endpoint:
+  slot-granular decode (per-lane KV cache / position / PRNG chain)
+  with MID-DECODE admission of queued prompts into freed lanes;
+  token-for-token equal to solo ``generate``.
+* :mod:`repro.serve.engine` -- the LM primitives: prefill + batched
+  single-token decode with per-family caches (KV / compressed-KV /
+  ring / recurrent state), pow-2 prompt-length bucketing, and the
+  slot-granular lane helpers the LM service drives.
 """

@@ -28,6 +28,31 @@ exact for full-attention caches (GQA, MLA):
 Ring-buffer (sliding-window), recurrent and encoder-decoder caches
 absorb prompt tokens order-dependently, so those configs fall back to
 the exact-length eager prefill (``_can_bucket``).
+
+Slot-granular decode (continuous batching)
+------------------------------------------
+
+The batched ``decode_step`` assumes every sequence sits at the SAME
+position (one scalar cache ``index``, ``q_pos = positions[0]``), so a
+new sequence can only join between full ``generate`` calls.  The
+slot-granular driver at the bottom of this module
+(:class:`LMSlotState`, :func:`admit_lane`, :func:`decode_chunk_slots`)
+lifts that restriction for the LM service
+(:mod:`repro.serve.lm_service`): each of S lanes carries its OWN
+per-lane cache (a solo batch=1 cache stacked on a leading lane axis --
+per-lane ``index`` included), position, PRNG chain, token count/budget
+and active flag, and one decode step is the solo single-token forward
+``vmap``-ped over lanes.  Sequences at different depths therefore
+coexist in one executable, a finished lane freezes via the active mask
+without halting the batch (mirroring
+``repro.core.engine.run_chunk_slots``), and between decode chunks the
+host admits a queued prompt into a freed lane: the bucketed jitted
+prefill above fills a fresh lane cache (index rewound to the true
+length per slot) and :func:`admit_lane` overwrites EVERY per-lane
+field, so a reused lane cannot leak its previous occupant's KV state.
+Exact for full-attention caches only -- the same ``_can_bucket`` gate
+as prefill bucketing; other cache families take the service's
+fallback path.
 """
 
 from __future__ import annotations
@@ -151,6 +176,150 @@ def _decode_loop(params, cfg, state: ServeState, key, steps: int,
     (state, _), toks = jax.lax.scan(body, (state, key), None,
                                     length=steps)
     return state, jnp.moveaxis(toks, 0, 1)       # (B, steps)
+
+
+# ==========================================================================
+# Slot-granular decode: S independent sequences, each with its own cache
+# lane / position / PRNG chain, through ONE vmapped decode executable.
+# ==========================================================================
+
+
+class LMSlotState(NamedTuple):
+    """S decode lanes for the continuous-batching LM service.
+
+    ``cache`` leaves are the SOLO (batch=1) cache leaves stacked on a
+    leading lane axis -- e.g. a GQA k-buffer is (S, L_periods, 1,
+    T_max, KV, Dh) and every cache ``index`` is (S, ...)-shaped -- so
+    ``vmap`` over axis 0 hands each lane EXACTLY the pytree a solo
+    ``decode_step`` consumes, index included.  That per-lane index is
+    what lets sequences at different depths share one executable.
+
+    Lifecycle mirrors :class:`repro.core.engine.SlotState`: a FREE lane
+    (``active=False``) still flows through every decode step (shape-
+    static executable) but only ``t`` is guarded by the mask -- a
+    frozen lane's cache/logits keep advancing harmlessly because its
+    tokens are already harvested and admission overwrites every field.
+    ``key`` is the per-lane PRNG chain, split once per decode step
+    exactly like ``generate``'s sampling chain, so a lane admitted at
+    seed s replays a solo ``generate(seed=s)`` token-for-token.
+    """
+    cache: Any               # per-lane caches, lane axis leading
+    last_logits: jax.Array   # (S, V) logits the next token samples from
+    pos: jax.Array           # (S,) next position index per lane
+    t: jax.Array             # (S,) tokens generated so far
+    max_t: jax.Array         # (S,) per-lane token budget
+    key: jax.Array           # (S,) per-lane sampling PRNG chains
+    active: jax.Array        # (S,) bool lifecycle mask
+
+    @property
+    def num_slots(self) -> int:
+        return self.last_logits.shape[0]
+
+
+def init_lm_slot_state(prefill: ServeState,
+                       num_slots: int) -> LMSlotState:
+    """An all-FREE lane table stamped from one prefilled lane's
+    batch=1 :class:`ServeState`.  The cache PYTREE STRUCTURE is what
+    matters: ``forward`` omits empty head/tail sections from its
+    output cache, so the table must mirror a real prefill's structure
+    (not ``init_cache``'s) for ``admit_lane``'s tree zip to line up."""
+    return LMSlotState(
+        cache=jax.tree.map(
+            lambda l: jnp.zeros((num_slots,) + l.shape, l.dtype),
+            prefill.cache),
+        last_logits=jnp.zeros((num_slots,)
+                              + prefill.last_logits.shape[-1:],
+                              prefill.last_logits.dtype),
+        pos=jnp.zeros((num_slots,), jnp.int32),
+        t=jnp.zeros((num_slots,), jnp.int32),
+        max_t=jnp.zeros((num_slots,), jnp.int32),
+        key=jax.random.split(jax.random.key(0), num_slots),
+        active=jnp.zeros((num_slots,), bool),
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def admit_lane(state: LMSlotState, lane, prefill: ServeState,
+               key: jax.Array, max_t) -> LMSlotState:
+    """Admit a freshly prefilled sequence into ``lane`` (a traced
+    index: one compile serves every lane).  ``prefill`` is the batch=1
+    :class:`ServeState` of the bucketed jitted prefill -- its cache
+    (index already rewound to the true prompt length) becomes the
+    lane's cache.  Every per-lane field is overwritten -- cache, last
+    logits, position, token count, budget, PRNG chain, active flag --
+    so a reused lane cannot leak its previous occupant's KV state."""
+    return LMSlotState(
+        cache=jax.tree.map(lambda b, l: b.at[lane].set(l),
+                           state.cache, prefill.cache),
+        last_logits=state.last_logits.at[lane].set(
+            prefill.last_logits[0].astype(state.last_logits.dtype)),
+        pos=state.pos.at[lane].set(prefill.pos),
+        t=state.t.at[lane].set(0),
+        max_t=state.max_t.at[lane].set(jnp.asarray(max_t, jnp.int32)),
+        key=state.key.at[lane].set(key),
+        active=state.active.at[lane].set(True),
+    )
+
+
+def lm_slot_trace_key(name: str, num_slots: int, max_len: int,
+                      chunk_steps: int, temperature: float) -> tuple:
+    """The ``trace_counts`` key of one slot-decode chunk executable --
+    the compile-cache key the LM service warms once."""
+    return ("lm_slots", name, num_slots, max_len, chunk_steps,
+            temperature)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "chunk_steps", "temperature",
+                                    "max_len"),
+                   donate_argnums=(1,))
+def decode_chunk_slots(params, state: LMSlotState, *, cfg,
+                       chunk_steps: int, temperature: float,
+                       max_len: int):
+    """One slot-granular decode chunk: ``chunk_steps`` tokens for every
+    lane, the solo single-token forward vmapped over the lane axis.
+
+    Per step each lane samples its next token from its own
+    ``last_logits`` with its own PRNG chain (bit-identical to
+    ``generate``'s ``k, sub = split(k); sample(logits, sub)``
+    schedule), then runs one decode forward against its own cache at
+    its own position.  The active mask guards only the token counter
+    ``t`` -- a frozen lane's cache keeps advancing harmlessly (tokens
+    past ``max_t`` are never read; admission overwrites the lane) --
+    so the executable stays shape-static and branch-free.  ``max_len``
+    is implied by the cache shapes; it is threaded only to key
+    ``trace_counts``.
+
+    Returns (new_state, toks (S, chunk_steps)); per lane only the
+    first ``t_after - t_before`` token columns are meaningful (a lane
+    freezes mid-chunk at exactly ``max_t``, and admission happens only
+    between chunks, so a lane's valid tokens are always a prefix).
+    """
+    trace_counts[lm_slot_trace_key(
+        cfg.name, state.num_slots, max_len, chunk_steps,
+        temperature)] += 1                               # trace time
+
+    def lane_decode(tok, cache, pos):
+        logits, new_cache, _ = tf.forward(params, cfg, tok[None, None],
+                                          cache=cache, pos_offset=pos)
+        return logits[0, -1], new_cache
+
+    def body(st, _):
+        splits = jax.vmap(jax.random.split)(st.key)      # (S, 2)
+        chain, sub = splits[:, 0], splits[:, 1]
+        tok = jax.vmap(
+            lambda lg, k: sample(lg[None], k, temperature)[0])(
+                st.last_logits, sub)
+        last, cache = jax.vmap(lane_decode)(tok, st.cache, st.pos)
+        do = st.active & (st.t < st.max_t)
+        st = LMSlotState(cache=cache, last_logits=last, pos=st.pos + 1,
+                         t=jnp.where(do, st.t + 1, st.t),
+                         max_t=st.max_t, key=chain, active=st.active)
+        return st, tok
+
+    state, toks = jax.lax.scan(body, state, None, length=chunk_steps)
+    state = state._replace(active=state.active & (state.t < state.max_t))
+    return state, jnp.moveaxis(toks, 0, 1)               # (S, chunk)
 
 
 def generate(params, cfg, prompt_tokens, *, steps: int,

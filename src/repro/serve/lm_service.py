@@ -1,0 +1,303 @@
+"""Continuous-batching LM generation service with MID-DECODE admission.
+
+``generate`` (:mod:`repro.serve.engine`) batches sequences that all
+start together; a freed row stays idle until the whole batch drains.
+This service removes that restriction with the same architecture as
+the SVM fit endpoint -- and the SAME scheduler core
+(:class:`repro.serve.scheduler.Scheduler`):
+
+  * S decode LANES share one compiled slot-granular decode chunk
+    (:func:`repro.serve.engine.decode_chunk_slots`): each lane has its
+    own KV-cache lane, position, PRNG chain, token budget and active
+    flag, so sequences at DIFFERENT depths coexist in one executable
+    and a finished sequence freezes (active mask) without halting the
+    batch -- mirroring ``repro.core.engine.run_chunk_slots``.
+  * Between decode chunks the host admits queued prompts into freed
+    lanes: one bucketed jitted prefill per pow-2 prompt bucket
+    (``_prefill_bucketed``, the PR 4 executable at the service's
+    ``max_len``) fills a fresh lane cache with the index rewound to
+    the true prompt length, and :func:`repro.serve.engine.admit_lane`
+    overwrites every per-lane field.
+  * Queue order (arrival / priority / deadline), admission into freed
+    slots, idle eviction, queue-to-result latency stamps and
+    compile-cache accounting are the scheduler's -- shared verbatim
+    with :class:`repro.serve.solver_service.SolverService`.
+
+Parity contract: a sequence admitted mid-decode into a freed lane
+reproduces the solo ``generate(..., seed=s)`` output TOKEN-FOR-TOKEN
+at the same seed and prompt bucket -- the lane replays the solo
+sampling chain (one key split per token) against the same bucketed-
+prefill cache, and decode masking is independent of the cache capacity
+``max_len``.  Exact for full-attention caches (GQA, MLA) only:
+ring-buffer, recurrent and encoder-decoder caches absorb prompts
+order-dependently (the ``_can_bucket`` gate), so those configs take
+the FALLBACK path -- requests still flow through the scheduler's
+queue, but each runs a solo ``generate`` to completion on its own
+(exact by construction, no mid-decode admission).
+
+Compile discipline: one decode-chunk executable per service
+(keyed by (model, S, max_len, chunk_steps, temperature)) plus one
+prefill executable per pow-2 prompt bucket -- after those are warm,
+every dispatch must be a compile-cache hit (asserted in
+``benchmarks/lm_serve_bench.py``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import engine
+from repro.serve.scheduler import Scheduler
+
+# All lanes share one decode executable regardless of prompt bucket
+# (prefill is per-bucket; decode is depth-agnostic), so the LM side is
+# a single scheduler group -- the solver side's many-bucket case and
+# this degenerate case run the identical admission core.
+_GROUP = "decode"
+
+
+@dataclass
+class GenRequest:
+    """One generation request: a 1-D prompt token array plus the
+    sampling configuration a solo ``generate`` call would take.
+    (``temperature`` is service-level: it keys the decode executable.)
+    """
+    prompt: np.ndarray
+    steps: int
+    seed: int = 0
+
+
+class GenResult(NamedTuple):
+    """Generated tokens plus the serving metadata of the request's
+    ride through the decode batch."""
+    request_id: int
+    tokens: np.ndarray       # (steps,) generated token ids
+    prompt_len: int
+    bucket: int              # pow-2 prompt bucket the prefill used
+    admitted_chunk: int      # service decode-chunk count at admission
+                             # (> 0 == admitted MID-decode)
+
+
+class _LaneLog:
+    """Host-side token accumulator for one RUNNING lane (attached to
+    the scheduler ticket as ``ticket.note``)."""
+
+    __slots__ = ("req", "tokens", "t_seen", "admitted_chunk")
+
+    def __init__(self, req: GenRequest, admitted_chunk: int):
+        self.req = req
+        self.tokens: list[np.ndarray] = []
+        self.t_seen = 0
+        self.admitted_chunk = admitted_chunk
+
+
+class LMService:
+    """Continuous-batching generation endpoint over the slot-granular
+    decode driver.
+
+    ``submit`` enqueues a prompt (assigning a ticket id); ``step``
+    runs ONE decode chunk -- admitting queued prompts into freed lanes
+    first (bucketed prefill + lane write), harvesting finished
+    sequences after -- and returns completed :class:`GenResult`s;
+    ``run`` drains everything; ``generate`` is the one-shot wrapper.
+
+    ``max_len`` is the per-lane cache capacity: every admitted request
+    must satisfy ``prompt_bucket + steps <= max_len`` (the decode
+    executable is keyed by it, so it is fixed per service).
+    ``temperature`` is static per service for the same reason.
+    """
+
+    def __init__(self, params, cfg, *, num_slots: int = 4,
+                 chunk_steps: int = 8, max_len: int = 128,
+                 temperature: float = 0.0, policy: str = "oldest",
+                 cache_dtype=jnp.bfloat16):
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.chunk_steps = chunk_steps
+        self.max_len = max_len
+        self.temperature = temperature
+        self.cache_dtype = cache_dtype
+        # full-attention caches only; other families -> fallback path
+        self.slot_mode = engine._can_bucket(cfg)
+        self._sched = Scheduler(
+            num_slots=num_slots if self.slot_mode else 1, policy=policy)
+        self._state: engine.LMSlotState | None = None
+        self._results: dict[int, GenResult] = {}
+        self._next_id = 0
+        self._chunks = 0         # decode chunks dispatched (lifetime)
+
+    # ------------------------------------------------------------ intake
+    def submit(self, prompt, steps: int, *, seed: int = 0,
+               priority: int = 0, deadline: float | None = None) -> int:
+        """Enqueue one prompt; returns its ticket id.
+        ``priority``/``deadline`` feed the scheduler's urgency order."""
+        prompt = np.asarray(prompt)
+        if prompt.ndim != 1:
+            raise ValueError(f"prompt must be 1-D, got {prompt.shape}")
+        s_b = engine.prompt_bucket(len(prompt))
+        if self.slot_mode and s_b + steps > self.max_len:
+            raise ValueError(
+                f"prompt bucket {s_b} + steps {steps} exceeds the "
+                f"service cache capacity max_len={self.max_len}")
+        rid = self._next_id
+        self._next_id += 1
+        self._sched.submit(_GROUP, rid,
+                           GenRequest(prompt=prompt, steps=steps,
+                                      seed=seed),
+                           priority=priority, deadline=deadline)
+        return rid
+
+    # --------------------------------------------------------- admission
+    def _admit(self, group) -> None:
+        """Prefill queued prompts into freed lanes (between chunks):
+        one bucketed jitted prefill per request, then the donated
+        ``admit_lane`` write.  The lane table itself is stamped from
+        the first prefill (its cache pytree structure is
+        config-dependent)."""
+        for lane, ticket in self._sched.admit(group):
+            req = ticket.payload
+            s = len(req.prompt)
+            s_b = engine.prompt_bucket(s)
+            toks = jnp.pad(jnp.asarray(req.prompt, jnp.int32)[None],
+                           ((0, 0), (0, s_b - s)))
+            pkey = (self.cfg.name, s_b, self.max_len)
+            with self._sched.stats.chunk(pkey, engine.trace_counts):
+                pre = engine._prefill_bucketed(
+                    self.params, self.cfg, toks,
+                    jnp.asarray(s, jnp.int32), max_len=self.max_len,
+                    cache_dtype=self.cache_dtype)
+            if self._state is None:
+                self._state = engine.init_lm_slot_state(
+                    pre, self.num_slots)
+            self._state = engine.admit_lane(
+                self._state, lane, pre, jax.random.key(req.seed),
+                req.steps)
+            ticket.note = _LaneLog(req, self._chunks)
+
+    # ----------------------------------------------------------- harvest
+    def _harvest(self, group, toks) -> list[GenResult]:
+        """Append each running lane's new tokens (its prefix of the
+        chunk's (S, chunk) token block), finish lanes whose budget is
+        exhausted, and free them."""
+        # ONE blocking transfer per chunk: lifecycle vectors + tokens
+        active, t, toks = map(np.asarray, jax.device_get(
+            (self._state.active, self._state.t, toks)))
+        out = []
+        for lane, ticket in list(group.slots.items()):
+            log = ticket.note
+            gen = int(t[lane]) - log.t_seen
+            if gen:
+                log.tokens.append(toks[lane, :gen])
+                log.t_seen = int(t[lane])
+            if active[lane]:
+                continue
+            tokens = (np.concatenate(log.tokens) if log.tokens
+                      else np.zeros((0,), toks.dtype))
+            res = GenResult(request_id=ticket.rid, tokens=tokens,
+                            prompt_len=len(log.req.prompt),
+                            bucket=engine.prompt_bucket(
+                                len(log.req.prompt)),
+                            admitted_chunk=log.admitted_chunk)
+            self._results[ticket.rid] = res
+            out.append(res)
+            self._sched.release(group, lane)
+        return out
+
+    # -------------------------------------------------------------- run
+    def step(self) -> list[GenResult]:
+        """One scheduling round: policy pick -> admit into freed lanes
+        -> one decode chunk -> harvest -> evict-if-drained.  Returns
+        the requests that finished this round."""
+        group = self._sched.next_group()
+        if group is None:
+            return []
+        if not self.slot_mode:
+            return self._step_fallback(group)
+        self._admit(group)
+        if not group.slots:
+            return []
+        dkey = engine.lm_slot_trace_key(
+            self.cfg.name, self.num_slots, self.max_len,
+            self.chunk_steps, self.temperature)
+        with self._sched.stats.chunk(dkey, engine.trace_counts):
+            self._state, toks = engine.decode_chunk_slots(
+                self.params, self._state, cfg=self.cfg,
+                chunk_steps=self.chunk_steps,
+                temperature=self.temperature, max_len=self.max_len)
+        self._chunks += 1
+        out = self._harvest(group, toks)
+        # Idle eviction: a drained service drops its lane table (the
+        # stacked caches are the big device allocation); re-creating
+        # it later costs one allocation, never a trace.
+        if self._sched.evict_idle(group):
+            self._state = None
+        return out
+
+    def _step_fallback(self, group) -> list[GenResult]:
+        """Non-bucketable cache families (ring / recurrent / enc-dec):
+        run each request solo via ``generate`` -- exact by
+        construction, scheduler-ordered, occupancy 1."""
+        out = []
+        for _lane, ticket in self._sched.admit(group):
+            req = ticket.payload
+            toks = engine.generate(
+                self.params, self.cfg,
+                jnp.asarray(req.prompt, jnp.int32)[None],
+                steps=req.steps, temperature=self.temperature,
+                seed=req.seed)
+            res = GenResult(request_id=ticket.rid,
+                            tokens=np.asarray(toks)[0],
+                            prompt_len=len(req.prompt),
+                            bucket=engine.prompt_bucket(len(req.prompt)),
+                            admitted_chunk=self._chunks)
+            self._results[ticket.rid] = res
+            out.append(res)
+            self._sched.release(group, _lane)
+        self._sched.evict_idle(group)
+        return out
+
+    def run(self) -> dict[int, GenResult]:
+        """Drain every queue; returns (and RELEASES) every result
+        completed since the last drain."""
+        while self._sched.has_work():
+            self.step()
+        out, self._results = self._results, {}
+        return out
+
+    def result(self, rid: int) -> GenResult:
+        """Pop one completed result (KeyError if not finished yet)."""
+        return self._results.pop(rid)
+
+    def generate(self, prompt, steps: int, **kw) -> GenResult:
+        """One-shot convenience: submit + drain (still exercises the
+        full lane path, occupancy 1).  Other requests completed by the
+        drain stay claimable via ``result()``."""
+        rid = self.submit(prompt, steps, **kw)
+        out = self.run()
+        res = out.pop(rid)
+        self._results.update(out)
+        return res
+
+    # ------------------------------------------------------------- stats
+    @property
+    def stats(self) -> dict:
+        """Compile-cache accounting (scheduler-tracked) over BOTH
+        dispatch kinds: per-bucket prefills and the decode chunk."""
+        return self._sched.stats.as_dict()
+
+    @property
+    def latencies(self):
+        """(request_id, queue-to-result seconds) per completed request
+        (bounded sliding window)."""
+        return self._sched.latencies
+
+    def latency_percentiles(self, *pcts: float) -> dict[float, float]:
+        """Queue-to-result latency percentiles (seconds), e.g.
+        ``svc.latency_percentiles(50.0, 95.0)``."""
+        return self._sched.latency_percentiles(*pcts)

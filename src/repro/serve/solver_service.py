@@ -10,6 +10,17 @@ requests into ONE compiled slot-batched step
 leading slot axis) and keeps that executable busy by admitting queued
 requests into lanes as they free up mid-run.
 
+Scheduling is delegated to the shared latency-aware core
+(:class:`repro.serve.scheduler.Scheduler`): the service is a thin
+WORKLOAD ADAPTER that owns only the device side -- per-bucket slot
+buffers (:class:`_Batch`), engine chunk dispatch, and harvest through
+the svm.py recovery path.  Queue ordering (arrival / priority /
+deadline urgency), cross-bucket policy (``oldest`` default,
+``round_robin`` retained for bit-compat), admission-into-freed-slots,
+idle-batch eviction, queue-to-result latency stamps and compile-cache
+accounting all live in the scheduler and are shared verbatim with the
+LM service (:mod:`repro.serve.lm_service`).
+
 Shape buckets
 -------------
 
@@ -32,14 +43,18 @@ mirror, so ``w`` stays pinned at 0 there.  Because the solver samples
 coordinate blocks over the FULL bucket axis, a bucketed solve is
 reproducible slot-for-slot against ``saddle.solve(..., n_pad, d_pad)``
 at the same bucket -- that is the service's parity contract (tested in
-``tests/test_solver_service.py``).
+``tests/test_solver_service.py``).  Scheduling policy can never change
+a request's numbers: a slot's trajectory depends only on its own seed,
+budget and bucket, and every chunk is a FULL chunk, so policies differ
+in WHEN a request runs, never in WHAT it computes.
 
 Slot lifecycle (see also :class:`repro.core.engine.SlotState`)
 --------------------------------------------------------------
 
   queue -> ADMIT -> RUNNING -> FINISHED -> harvest -> (lane FREE)
 
-  * ADMIT (between chunks only): :func:`engine.admit_into_slot`
+  * ADMIT (between chunks only): the scheduler assigns urgency-ordered
+    tickets to free lanes; :func:`engine.admit_into_slot` then
     overwrites EVERY per-slot field -- state, PRNG chain, budget,
     active flag -- so a reused lane cannot leak its previous
     occupant's duals; the request's packed operand is written into the
@@ -58,15 +73,14 @@ Compile discipline
 
 The chunk executable is keyed by (S, bucket shape, block size,
 chunk_steps, project, check_gap, backend) -- all admission patterns,
-chunk lengths and per-request parameter VALUES share it.  The service
-tracks trace counts per key (``engine.trace_counts``); after a bucket
-is warm, every chunk must be a compile-cache hit
+chunk lengths and per-request parameter VALUES share it.  The
+scheduler tracks trace counts per key (``engine.trace_counts``); after
+a bucket is warm, every chunk must be a compile-cache hit
 (``SolverService.stats`` is asserted in ``benchmarks/serve_bench.py``).
 """
 
 from __future__ import annotations
 
-import collections
 import functools
 from dataclasses import dataclass
 from typing import Any, NamedTuple
@@ -79,6 +93,7 @@ from repro.core import engine
 from repro.core import preprocess as pp
 from repro.core import saddle
 from repro.core import svm as svm_mod
+from repro.serve.scheduler import Scheduler
 
 
 @dataclass
@@ -112,7 +127,8 @@ class FitResult(NamedTuple):
 
 
 class _Slot(NamedTuple):
-    """Host-side bookkeeping for one RUNNING lane."""
+    """Host-side bookkeeping for one RUNNING lane (attached to the
+    scheduler ticket as ``ticket.note``)."""
     request_id: int
     req: FitRequest
     pre: Any                 # Preprocessed (transform to undo at harvest)
@@ -130,7 +146,10 @@ def _write_slot_data(x_t_b, sign_b, slot, x_t, sign):
 
 
 class _Batch:
-    """One bucket's slot table: device buffers + host slot metadata.
+    """One bucket's DEVICE buffers: slot-batched engine state, the
+    (S, d, n) packed operands and the per-slot SlotParams mirror.  The
+    host-side queue and lane occupancy live in the scheduler's Group
+    (this object is that group's ``payload``).
 
     ``project``/``check_gap`` are FIXED at batch creation (hard-margin
     and nu-SVM requests live in separate batches): a request's
@@ -153,15 +172,6 @@ class _Batch:
                               gamma=1.0, tau=1.0, mwu_c=1.0, mwu_dot=1.0,
                               nu=1.0, gap_tol=0.0))
         self.sp_dev = None                      # device mirror of sp
-        self.slots: dict[int, _Slot] = {}       # lane -> running request
-        self.queue: collections.deque[tuple[int, FitRequest]] = \
-            collections.deque()
-
-    def free_lanes(self, num_slots: int):
-        return [i for i in range(num_slots) if i not in self.slots]
-
-    def has_work(self) -> bool:
-        return bool(self.slots or self.queue)
 
 
 class SolverService:
@@ -173,35 +183,42 @@ class SolverService:
     returns any completed :class:`FitResult`s; ``run`` drains
     everything.  ``fit`` is the one-shot convenience wrapper.
 
+    ``policy`` selects the cross-bucket scheduler: ``"oldest"``
+    (default, latency-aware oldest-request-first, fill-rate tie-break)
+    or ``"round_robin"`` (PR 4's cursor).  Results are policy-invariant
+    (see the module docstring); only queue latency changes.
+
     The service is deliberately host-driven between chunks (admission
     and harvest are O(S) scalar decisions); all per-iteration work
     stays inside the one compiled chunk per bucket.
     """
 
     def __init__(self, num_slots: int = 8, chunk_steps: int = 64,
-                 backend: str = "jnp"):
+                 backend: str = "jnp", policy: str = "oldest"):
         self.num_slots = num_slots
         self.chunk_steps = chunk_steps
         self.backend = backend
-        self._batches: dict[tuple, _Batch] = {}
+        self._sched = Scheduler(num_slots=num_slots, policy=policy)
         self._results: dict[int, FitResult] = {}
         self._pre_cache: dict[int, Any] = {}
         self._next_id = 0
-        self._rr = 0               # round-robin cursor over batches
-        # compile-cache accounting: compiles are counted by observing
-        # the trace-count delta around OUR OWN chunk dispatches, so
-        # traces by other services / solo solves sharing an executable
-        # key are never attributed to this service
-        self.chunk_calls: collections.Counter = collections.Counter()
-        self._compiles = 0
+
+    @property
+    def _batches(self) -> dict:
+        """Legacy view: bucket key -> device-buffer payload (kept for
+        tests/introspection; the scheduler owns the group table)."""
+        return {g.key: g.payload for g in self._sched.groups}
 
     # ------------------------------------------------------------ intake
-    def submit(self, req: FitRequest) -> int:
+    def submit(self, req: FitRequest, *, priority: int = 0,
+               deadline: float | None = None) -> int:
         """Validate, preprocess and enqueue a fit request; returns its
         ticket id.  The heavy per-request work here (split, WD
         transform, bucket packing) is exactly Algorithm 1 --
         preprocessing is NOT the serving bottleneck the slot engine
-        addresses, so it runs at intake."""
+        addresses, so it runs at intake.  ``priority``/``deadline``
+        feed the scheduler's urgency order (see
+        :mod:`repro.serve.scheduler`)."""
         rid = self._next_id
         self._next_id += 1
         xp, xm = svm_mod.split_classes(req.x, req.y)   # raises on 1 class
@@ -218,23 +235,22 @@ class SolverService:
         project = req.nu > 0.0
         check_gap = req.gap_tol > 0.0
         batch_key = bucket + (req.block_size, project, check_gap)
-        batch = self._batches.get(batch_key)
-        if batch is None:
-            batch = self._batches[batch_key] = _Batch(
-                bucket, self.num_slots, project, check_gap)
-        batch.queue.append((rid, req))
+        self._sched.submit(
+            batch_key, rid, req, priority=priority, deadline=deadline,
+            payload_factory=lambda: _Batch(bucket, self.num_slots,
+                                           project, check_gap))
         self._pre_cache[rid] = pre
         return rid
 
     # --------------------------------------------------------- admission
-    def _admit(self, batch: _Batch) -> None:
-        """Fill free lanes from the bucket's queue (between chunks)."""
+    def _admit(self, group) -> None:
+        """Realize the scheduler's urgency-ordered lane assignments in
+        device state (between chunks)."""
+        batch = group.payload
         n_pad, d_pad = batch.bucket
-        for lane in batch.free_lanes(self.num_slots):
-            if not batch.queue:
-                break
-            rid, req = batch.queue.popleft()
-            pre = self._pre_cache.pop(rid)
+        for lane, ticket in self._sched.admit(group):
+            req = ticket.payload
+            pre = self._pre_cache.pop(ticket.rid)
             xp_t, xm_t = pre.xp, pre.xm
             # preprocess() already padded d to a power of two, so the
             # request's dimensionality IS the batch's d rung
@@ -260,19 +276,21 @@ class SolverService:
             for f in engine.SlotParams._fields:
                 getattr(batch.sp, f)[lane] = getattr(row, f)
             batch.sp_dev = None                 # refresh device mirror
-            batch.slots[lane] = _Slot(request_id=rid, req=req, pre=pre,
-                                      xp_t=xp_t, xm_t=xm_t, history=[])
+            ticket.note = _Slot(request_id=ticket.rid, req=req, pre=pre,
+                                xp_t=xp_t, xm_t=xm_t, history=[])
 
     # ----------------------------------------------------------- harvest
-    def _harvest(self, batch: _Batch, obj) -> list[FitResult]:
+    def _harvest(self, group, obj) -> list[FitResult]:
         """Record per-slot history, extract every FINISHED slot through
         the svm.py recovery path, and free its lane."""
+        batch = group.payload
         # ONE blocking transfer per chunk for all (S,)-sized lifecycle
         # vectors; the big per-slot state only moves for finished slots
         active, t, obj = map(np.asarray, jax.device_get(
             (batch.state.active, batch.state.t, obj)))
         out = []
-        for lane, slot in list(batch.slots.items()):
+        for lane, ticket in list(group.slots.items()):
+            slot = ticket.note
             slot.history.append((int(t[lane]), float(obj[lane])))
             if active[lane]:
                 continue
@@ -289,50 +307,27 @@ class SolverService:
                             history=slot.history)
             self._results[slot.request_id] = res
             out.append(res)
-            del batch.slots[lane]
+            self._sched.release(group, lane)
         return out
 
     # -------------------------------------------------------------- run
-    def _pick_batch(self) -> _Batch | None:
-        """Round-robin over batches with work: the cursor advances past
-        the chosen batch, so a continuously-fed bucket cannot starve
-        the others."""
-        batches = list(self._batches.values())
-        for i in range(len(batches)):
-            j = (self._rr + i) % len(batches)
-            if batches[j].has_work():
-                self._rr = j + 1
-                return batches[j]
-        return None
-
-    def _evict_idle(self, batch: _Batch) -> None:
-        """Drop a drained batch: its device buffers (slot state + the
-        (S, d, n) operand) are per-batch, so holding every bucket ever
-        seen would leak device memory across varied request shapes.
-        The COMPILED executable survives in the jit cache regardless --
-        re-creating a batch later costs one allocation, not a trace."""
-        if not batch.has_work():
-            for k, v in list(self._batches.items()):
-                if v is batch:
-                    del self._batches[k]
-
     def step(self) -> list[FitResult]:
-        """One scheduling round: admit -> one chunk -> harvest.
-        Returns the requests that finished this round."""
-        batch = self._pick_batch()
-        if batch is None:
+        """One scheduling round: policy pick -> admit -> one chunk ->
+        harvest -> evict-if-drained.  Returns the requests that
+        finished this round."""
+        group = self._sched.next_group()
+        if group is None:
             return []
-        self._admit(batch)
-        if not batch.slots:
+        self._admit(group)
+        if not group.slots:
             return []
+        batch = group.payload
         n_pad, d_pad = batch.bucket
         project, check_gap = batch.project, batch.check_gap
-        block_size = next(iter(batch.slots.values())).req.block_size
+        block_size = next(iter(group.slots.values())).payload.block_size
         key = engine.slot_trace_key(self.num_slots, n_pad, d_pad,
                                     block_size, self.chunk_steps,
                                     project, check_gap, self.backend)
-        self.chunk_calls[key] += 1
-        traces_before = engine.trace_counts.get(key, 0)
         # Always run FULL chunks: a slot near its budget is frozen by
         # the per-slot mask at exactly max_t, which keeps every slot's
         # chunk/key schedule identical to a solo solve with
@@ -341,14 +336,19 @@ class SolverService:
         # a partial FIRST chunk no solo schedule ever takes.
         if batch.sp_dev is None:
             batch.sp_dev = jax.tree.map(jnp.asarray, batch.sp)
-        batch.state, obj = engine.run_chunk_slots(
-            batch.state, batch.x_t, batch.sign, batch.sp_dev,
-            self.chunk_steps,
-            chunk_steps=self.chunk_steps, d=d_pad, block_size=block_size,
-            project=project, check_gap=check_gap, backend=self.backend)
-        self._compiles += engine.trace_counts.get(key, 0) - traces_before
-        out = self._harvest(batch, obj)
-        self._evict_idle(batch)
+        with self._sched.stats.chunk(key, engine.trace_counts):
+            batch.state, obj = engine.run_chunk_slots(
+                batch.state, batch.x_t, batch.sign, batch.sp_dev,
+                self.chunk_steps,
+                chunk_steps=self.chunk_steps, d=d_pad,
+                block_size=block_size, project=project,
+                check_gap=check_gap, backend=self.backend)
+        out = self._harvest(group, obj)
+        # Idle-batch eviction: a drained batch's device buffers (slot
+        # state + the (S, d, n) operand) would otherwise leak device
+        # memory across varied request shapes.  The COMPILED executable
+        # survives in the jit cache regardless.
+        self._sched.evict_idle(group)
         return out
 
     def run(self) -> dict[int, FitResult]:
@@ -356,7 +356,7 @@ class SolverService:
         completed since the last drain -- results are not retained
         service-side, so a long-running service stays O(active slots),
         not O(requests served)."""
-        while any(b.has_work() for b in self._batches.values()):
+        while self._sched.has_work():
             self.step()
         out, self._results = self._results, {}
         return out
@@ -378,13 +378,23 @@ class SolverService:
     # ------------------------------------------------------------- stats
     @property
     def stats(self) -> dict:
-        """Compile-cache accounting: ``compiles`` counts the traces
-        observed during THIS service's chunk dispatches (trace-count
-        delta around each call -- other services or solo solves
-        sharing an executable key are never misattributed),
-        ``cache_hits`` the chunk calls served without tracing.  After
-        warm-up every call must be a hit (asserted by the serve
-        bench)."""
-        calls = sum(self.chunk_calls.values())
-        return {"chunk_calls": calls, "compiles": self._compiles,
-                "cache_hits": calls - self._compiles}
+        """Compile-cache accounting (scheduler-tracked): ``compiles``
+        counts the traces observed during THIS service's chunk
+        dispatches (trace-count delta around each call -- other
+        services or solo solves sharing an executable key are never
+        misattributed), ``cache_hits`` the chunk calls served without
+        tracing.  After warm-up every call must be a hit (asserted by
+        the serve bench)."""
+        return self._sched.stats.as_dict()
+
+    @property
+    def latencies(self):
+        """(request_id, queue-to-result seconds) per completed request
+        -- stamped by the scheduler at submit and release (bounded
+        sliding window)."""
+        return self._sched.latencies
+
+    def latency_percentiles(self, *pcts: float) -> dict[float, float]:
+        """Queue-to-result latency percentiles (seconds), e.g.
+        ``svc.latency_percentiles(50.0, 95.0)``."""
+        return self._sched.latency_percentiles(*pcts)

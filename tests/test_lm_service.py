@@ -1,0 +1,160 @@
+"""Continuous-batching LM service (repro.serve.lm_service): mid-decode
+admission into freed KV lanes must reproduce solo ``generate``
+token-for-token (full-attention caches: GQA and MLA absorbed decode),
+lane reuse must not leak KV state, non-bucketable cache families must
+take the exact fallback path, and warm services must never retrace."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as tf
+from repro.serve import engine
+from repro.serve.lm_service import LMService
+
+# LM-side tests dominate the full-suite runtime; the fast CI tier
+# deselects them (the lm_serve bench covers this path in ci.sh fast)
+pytestmark = [pytest.mark.slow, pytest.mark.serve]
+
+
+def _model(arch):
+    cfg = get_config(arch).reduced()
+    return cfg, tf.init_lm(jax.random.key(0), cfg)
+
+
+def _solo(params, cfg, prompt, steps, seed, temperature=0.0):
+    return np.asarray(engine.generate(
+        params, cfg, jnp.asarray(prompt, jnp.int32)[None], steps=steps,
+        temperature=temperature, seed=seed))[0]
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, s) for s in lens]
+
+
+@pytest.mark.parametrize("arch", ["gemma-7b", "deepseek-v2-lite-16b"])
+def test_mid_decode_admission_matches_solo(arch):
+    """A sequence admitted into a freed lane BETWEEN decode chunks --
+    while another sequence is mid-decode -- must generate exactly the
+    tokens of a solo ``generate`` at the same seed and prompt bucket,
+    for both full-attention cache families (GQA, MLA absorbed)."""
+    cfg, params = _model(arch)
+    assert engine._can_bucket(cfg)
+    p1, p2, p3 = _prompts(cfg, [6, 7, 11])      # buckets 8, 8, 16
+    svc = LMService(params, cfg, num_slots=2, chunk_steps=4, max_len=48)
+    assert svc.slot_mode
+    r1 = svc.submit(p1, steps=12, seed=3)
+    assert svc.step() == []                     # chunk 1: only r1 runs
+    r2 = svc.submit(p2, steps=8, seed=5)        # joins mid-decode
+    r3 = svc.submit(p3, steps=6, seed=7)        # waits for a freed lane
+    res = svc.run()
+    for rid, p, steps, seed in [(r1, p1, 12, 3), (r2, p2, 8, 5),
+                                (r3, p3, 6, 7)]:
+        np.testing.assert_array_equal(res[rid].tokens,
+                                      _solo(params, cfg, p, steps, seed))
+    assert res[r2].admitted_chunk > 0           # genuinely mid-decode
+    assert res[r3].admitted_chunk > res[r2].admitted_chunk
+
+
+def test_freed_lane_reuse_leaks_no_kv_state():
+    """With ONE lane, the second request reuses the first's lane; the
+    admit-time overwrite (cache, index, position, PRNG chain) must
+    make it indistinguishable from a fresh service."""
+    cfg, params = _model("gemma-7b")
+    p1, p2 = _prompts(cfg, [5, 13], seed=1)     # different buckets too
+    svc = LMService(params, cfg, num_slots=1, chunk_steps=4, max_len=48)
+    a = svc.generate(p1, 8, seed=11)
+    b = svc.generate(p2, 8, seed=12)
+    np.testing.assert_array_equal(a.tokens, _solo(params, cfg, p1, 8, 11))
+    np.testing.assert_array_equal(b.tokens, _solo(params, cfg, p2, 8, 12))
+
+
+def test_temperature_sampling_replays_solo_chain():
+    """temperature > 0: each lane's per-slot PRNG chain must replay
+    the solo sampling schedule (one split per token), not just match
+    greedily."""
+    cfg, params = _model("gemma-7b")
+    p1, p2 = _prompts(cfg, [6, 7], seed=2)
+    svc = LMService(params, cfg, num_slots=2, chunk_steps=3, max_len=32,
+                    temperature=0.7)
+    r1 = svc.submit(p1, steps=9, seed=21)
+    svc.step()
+    r2 = svc.submit(p2, steps=5, seed=22)       # mid-decode
+    res = svc.run()
+    for rid, p, steps, seed in [(r1, p1, 9, 21), (r2, p2, 5, 22)]:
+        np.testing.assert_array_equal(
+            res[rid].tokens,
+            _solo(params, cfg, p, steps, seed, temperature=0.7))
+
+
+def test_zero_recompiles_after_warmup():
+    """After one pass has warmed the decode chunk and every prompt
+    bucket, further traffic -- including mid-decode admissions and
+    idle eviction/re-creation of the lane table -- must be 100%
+    compile-cache hits."""
+    cfg, params = _model("gemma-7b")
+    p1, p2 = _prompts(cfg, [6, 12], seed=3)     # buckets 8 and 16
+    svc = LMService(params, cfg, num_slots=2, chunk_steps=4, max_len=48)
+    svc.submit(p1, steps=8, seed=0)
+    svc.submit(p2, steps=6, seed=1)
+    svc.run()                                   # warm-up
+    compiles = svc.stats["compiles"]
+    snap = dict(engine.trace_counts)
+    svc.submit(p1, steps=8, seed=4)
+    svc.step()
+    svc.submit(p2, steps=6, seed=5)             # mid-decode admission
+    svc.run()
+    assert svc.stats["compiles"] == compiles
+    delta = {k: v - snap.get(k, 0) for k, v in engine.trace_counts.items()
+             if v != snap.get(k, 0)}
+    assert delta == {}, f"recompile after warm-up: {delta}"
+    calls = svc.stats
+    assert calls["cache_hits"] == calls["chunk_calls"] - compiles
+
+
+def test_fallback_families_route_through_solo_generate():
+    """Ring-buffer / recurrent / enc-dec caches cannot take the
+    slot-granular path; the service must fall back to exact solo
+    generation while preserving scheduler queue order."""
+    cfg, params = _model("recurrentgemma-2b")
+    assert not engine._can_bucket(cfg)
+    p1, p2 = _prompts(cfg, [6, 9], seed=4)
+    svc = LMService(params, cfg, num_slots=2, chunk_steps=4)
+    assert not svc.slot_mode
+    r1 = svc.submit(p1, steps=5, seed=8)
+    r2 = svc.submit(p2, steps=5, seed=9, deadline=1.0)  # jumps the queue
+    res = svc.run()
+    np.testing.assert_array_equal(res[r1].tokens,
+                                  _solo(params, cfg, p1, 5, 8))
+    np.testing.assert_array_equal(res[r2].tokens,
+                                  _solo(params, cfg, p2, 5, 9))
+    done = [rid for rid, _ in svc.latencies]
+    assert done.index(r2) < done.index(r1)      # deadline served first
+
+
+def test_capacity_validated_at_submit():
+    cfg, params = _model("gemma-7b")
+    svc = LMService(params, cfg, num_slots=2, chunk_steps=4, max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        svc.submit(np.zeros(9, np.int32), steps=9)   # bucket 16 + 9 > 16
+    with pytest.raises(ValueError, match="1-D"):
+        svc.submit(np.zeros((1, 4), np.int32), steps=2)
+
+
+def test_deadline_request_admitted_before_slack_backlog():
+    """Scheduler urgency flows through the LM adapter: with one lane
+    and a backlog, a deadline-tagged request is admitted next even
+    though it arrived last."""
+    cfg, params = _model("gemma-7b")
+    p = _prompts(cfg, [5, 5, 5], seed=5)
+    svc = LMService(params, cfg, num_slots=1, chunk_steps=4, max_len=32)
+    r0 = svc.submit(p[0], steps=4, seed=0)
+    svc.step()                                  # r0 occupies the lane
+    svc.submit(p[1], steps=4, seed=1)           # slack backlog
+    rid_d = svc.submit(p[2], steps=4, seed=2, deadline=0.5)
+    svc.run()
+    done = [rid for rid, _ in svc.latencies]
+    assert done == [r0, rid_d, done[-1]]        # jumps the slack queue

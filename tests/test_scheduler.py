@@ -1,0 +1,280 @@
+"""Scheduler-core properties (repro.serve.scheduler): urgency order
+(FIFO within equal priority, deadline before slack, priority classes),
+starvation-freedom of the oldest-first policy under sustained backlog,
+round-robin bit-compatibility with PR 4's ``_pick_batch``, admission /
+release / eviction lifecycle, latency stamps and compile accounting.
+
+Property tests use hypothesis when installed (see
+tests/_hypothesis_stub.py); each property also has a deterministic
+anchor test so the invariants stay covered on the bare seed image.
+"""
+
+import collections
+
+import pytest
+
+from _hypothesis_stub import given, settings, st
+from repro.serve.scheduler import (CompileStats, OldestFirstPolicy,
+                                   RoundRobinPolicy, Scheduler)
+
+pytestmark = pytest.mark.serve
+
+
+# ---------------------------------------------------------------- helpers
+class _RefRoundRobin:
+    """PR 4's ``SolverService._pick_batch`` verbatim (cursor over the
+    insertion-ordered batch list), kept as the compatibility oracle."""
+
+    def __init__(self):
+        self._rr = 0
+
+    def pick(self, has_work: list[bool]):
+        for i in range(len(has_work)):
+            j = (self._rr + i) % len(has_work)
+            if has_work[j]:
+                self._rr = j + 1
+                return j
+        return None
+
+
+def _drain_order(sched, key="g"):
+    """Admit every queued ticket of one group through a 1-lane cycle;
+    returns rids in admission order."""
+    order = []
+    g = sched.group(key)
+    while g.has_work():
+        for lane, t in sched.admit(g):
+            order.append(t.rid)
+            sched.release(g, lane)
+    return order
+
+
+# ------------------------------------------------------- admission order
+def test_fifo_within_equal_priority():
+    sched = Scheduler(num_slots=1)
+    for rid in range(7):
+        sched.submit("g", rid)
+    assert _drain_order(sched) == list(range(7))
+
+
+def test_deadline_tagged_never_after_slack():
+    sched = Scheduler(num_slots=1)
+    sched.submit("g", 0)                       # slack, arrives first
+    sched.submit("g", 1, deadline=9.0)
+    sched.submit("g", 2)
+    sched.submit("g", 3, deadline=2.0)
+    # all deadline-tagged first (earliest deadline first), then FIFO
+    assert _drain_order(sched) == [3, 1, 0, 2]
+
+
+def test_priority_orders_within_deadline_class():
+    sched = Scheduler(num_slots=1)
+    sched.submit("g", 0, priority=0)
+    sched.submit("g", 1, priority=5)
+    sched.submit("g", 2, priority=5)
+    sched.submit("g", 3, priority=1)
+    assert _drain_order(sched) == [1, 2, 3, 0]
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.booleans()),
+                min_size=1, max_size=40))
+def test_admission_order_properties(reqs):
+    """For ANY mix of priorities and deadline tags: (a) every
+    deadline-tagged ticket is admitted before every slack one, (b)
+    admission is FIFO within (deadline-tag, priority) classes."""
+    sched = Scheduler(num_slots=1)
+    info = {}
+    for rid, (prio, tagged) in enumerate(reqs):
+        sched.submit("g", rid, priority=prio,
+                     deadline=1.0 if tagged else None)
+        info[rid] = (prio, tagged)
+    order = _drain_order(sched)
+    assert sorted(order) == sorted(info)
+    seen_slack = False
+    last_in_class = {}
+    for rid in order:
+        prio, tagged = info[rid]
+        if not tagged:
+            seen_slack = True
+        assert not (tagged and seen_slack), \
+            f"deadline-tagged {rid} scheduled after a slack ticket"
+        cls = (tagged, prio)
+        assert last_in_class.get(cls, -1) < rid, \
+            f"FIFO violated within class {cls}: {order}"
+        last_in_class[cls] = rid
+
+
+# ------------------------------------------------- starvation / fairness
+def _backlogged_rounds(policy, groups=3, rounds=60):
+    """Sustained backlog on every group: each scheduling round runs one
+    group's 'chunk' (completing its running ticket) and immediately
+    refills that group's queue.  Returns the picked group keys."""
+    sched = Scheduler(num_slots=1, policy=policy)
+    rid = 0
+    for gk in range(groups):
+        for _ in range(2):
+            sched.submit(gk, rid)
+            rid += 1
+    picked = []
+    for _ in range(rounds):
+        g = sched.next_group()
+        assert g is not None
+        picked.append(g.key)
+        sched.admit(g)
+        for lane in list(g.slots):
+            sched.release(g, lane)
+        sched.submit(g.key, rid)      # the backlog never drains
+        rid += 1
+    return picked
+
+
+@pytest.mark.parametrize("policy", ["oldest", "round_robin"])
+def test_no_group_starves_under_sustained_backlog(policy):
+    picked = _backlogged_rounds(policy, groups=3, rounds=60)
+    counts = collections.Counter(picked)
+    assert set(counts) == {0, 1, 2}, counts
+    # every group keeps getting turns in every window, not just once
+    for start in range(0, 60, 10):
+        window = collections.Counter(picked[start:start + 10])
+        assert set(window) == {0, 1, 2}, (start, window)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 1))
+def test_backlog_starvation_property(groups, policy_idx):
+    """Under sustained backlog no group waits more than ~2*groups
+    rounds between turns, for BOTH policies."""
+    policy = ["oldest", "round_robin"][policy_idx]
+    picked = _backlogged_rounds(policy, groups=groups,
+                                rounds=12 * groups)
+    last = {gk: -1 for gk in range(groups)}
+    for i, gk in enumerate(picked):
+        for other, seen in last.items():
+            assert i - seen <= 2 * groups + 1, \
+                f"group {other} starved around round {i}: {picked}"
+        last[gk] = i
+
+
+def test_oldest_first_prefers_globally_oldest_group():
+    sched = Scheduler(num_slots=2, policy="oldest")
+    sched.submit("a", 0)
+    sched.submit("b", 1)
+    sched.submit("a", 2)
+    assert sched.next_group().key == "a"       # rid 0 is oldest
+    g = sched.group("a")
+    sched.admit(g)
+    for lane in list(g.slots):
+        sched.release(g, lane)
+    sched.evict_idle(g)
+    assert sched.next_group().key == "b"
+
+
+def test_oldest_first_runs_running_work_without_queue():
+    """A group with running slots but an empty queue still gets
+    chunks (its running tickets carry their urgency)."""
+    sched = Scheduler(num_slots=1, policy="oldest")
+    sched.submit("a", 0)
+    g = sched.group("a")
+    sched.admit(g)
+    assert g.queued == 0 and g.fill == 1
+    assert sched.next_group() is g
+
+
+# ------------------------------------------------ round-robin bit-compat
+def _compare_rr(script):
+    """Replay an add/drain/refill script against both the policy and
+    the PR 4 reference; the picked indices must match exactly."""
+    sched = Scheduler(num_slots=1, policy="round_robin")
+    ref = _RefRoundRobin()
+    keys = []
+    rid = 0
+    for action in script:
+        if action == -1 or not keys:           # add a new group
+            k = len(keys)
+            keys.append(k)
+            sched.submit(k, rid)
+            rid += 1
+            continue
+        gk = keys[action % len(keys)]
+        if action % 2:                          # refill that group
+            sched.submit(gk, rid)
+            rid += 1
+        # one scheduling round
+        groups = sched.groups
+        has_work = [g.has_work() for g in groups]
+        want = ref.pick(has_work)
+        got = sched.next_group()
+        if want is None:
+            assert got is None
+        else:
+            assert got is groups[want], (has_work, want)
+            sched.admit(got)
+            for lane in list(got.slots):       # complete => may drain
+                sched.release(got, lane)
+
+
+def test_round_robin_reproduces_pr4_pick_batch():
+    _compare_rr([-1, 0, -1, 1, 0, -1, 2, 2, 1, 0, 4, 3, 5, 1])
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(-1, 7), min_size=1, max_size=60))
+def test_round_robin_bit_compat_property(script):
+    _compare_rr(script)
+
+
+def test_round_robin_skips_empty_groups_and_advances_cursor():
+    sched = Scheduler(num_slots=1, policy="round_robin")
+    for gk in (0, 1, 2):
+        sched.submit(gk, gk)
+    picks = []
+    for _ in range(6):
+        g = sched.next_group()
+        picks.append(g.key)                   # queues never drain here
+    assert picks == [0, 1, 2, 0, 1, 2]
+
+
+# --------------------------------------------------- lifecycle / stats
+def test_admit_fills_free_lanes_in_order_and_caps_at_slots():
+    sched = Scheduler(num_slots=2)
+    for rid in range(5):
+        sched.submit("g", rid)
+    g = sched.group("g")
+    got = sched.admit(g)
+    assert [(lane, t.rid) for lane, t in got] == [(0, 0), (1, 1)]
+    assert sched.admit(g) == []               # no free lane
+    sched.release(g, 0)
+    got = sched.admit(g)
+    assert [(lane, t.rid) for lane, t in got] == [(0, 2)]
+
+
+def test_release_records_latency_and_eviction_drops_group():
+    sched = Scheduler(num_slots=1)
+    sched.submit("g", 7)
+    g = sched.group("g")
+    sched.admit(g)
+    assert not sched.evict_idle(g)            # still has running work
+    t = sched.release(g, 0)
+    assert t.rid == 7
+    assert [rid for rid, _ in sched.latencies] == [7]
+    assert sched.latencies[0][1] >= 0.0
+    assert sched.evict_idle(g) and not sched.groups
+    assert sched.latency_percentiles(50.0)    # non-empty after release
+
+
+def test_compile_stats_attribute_only_own_deltas():
+    counter = collections.Counter()
+    stats = CompileStats()
+    with stats.chunk("k", counter):
+        counter["k"] += 1                     # a compile we caused
+    counter["k"] += 5                         # someone else's traces
+    with stats.chunk("k", counter):
+        pass                                  # cache hit
+    assert stats.as_dict() == {"chunk_calls": 2, "compiles": 1,
+                               "cache_hits": 1}
+
+
+def test_policy_objects_accepted_directly():
+    assert Scheduler(1, policy=OldestFirstPolicy()).next_group() is None
+    assert Scheduler(1, policy=RoundRobinPolicy()).next_group() is None
