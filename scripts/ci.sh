@@ -19,7 +19,20 @@ shift || true
 
 case "$tier" in
   fast)
+    # lint: guarded -- the container image does not bake ruff in
+    # (requirements-dev.txt + ruff.toml when it is available)
+    if command -v ruff >/dev/null 2>&1; then
+      ruff check src tests benchmarks scripts
+    fi
     python -m pytest -q -m "not slow" "$@"
+    # static analysis gate: BlockSpec/race/VMEM audit of every Pallas
+    # kernel program (all serving rungs + both dry-run mesh client
+    # shapes) and the rule-based compiled-HLO lint of the hot paths
+    # (donation, host transfers, f64, CommModel budget, trip counts).
+    # Fails on any unsuppressed finding.  BENCH_analysis.json is
+    # gitignored; add --dryrun-meshes for the k=256/512 lowerings.
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+      python -m repro.analysis.run --json BENCH_analysis.json
     # perf smoke: quick engine bench with machine-readable metrics so
     # the perf trajectory (packed-step speedup, driver overhead) is
     # tracked from every fast run.  BENCH_engine.json is gitignored.

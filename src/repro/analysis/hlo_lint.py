@@ -1,0 +1,444 @@
+"""Layer 2: rule-based lint over the AOT-compiled HLO of the hot paths.
+
+Each lint target compiles one production entry point against
+ShapeDtypeStruct arguments (zero device allocation beyond compile) and
+runs five rules over the optimized module text, via
+:mod:`repro.utils.hlo_analysis`:
+
+DONATE-001  donated buffers survive to ``input_output_alias`` -- a
+            dropped alias silently doubles the state memory of every
+            chunk (the regression class PR 4 fixed by hand)
+HOST-001    no infeed/outfeed/send/recv or host/callback custom-calls
+            inside any while body -- a host round-trip in the chunk
+            loop serializes the device
+DTYPE-001   no f64/c128 ops anywhere -- an accidental promotion (x64
+            weak types) halves TPU throughput
+COMM-001    loop-body collectives are a sub-multiset of the analytic
+            ``CommModel`` budget (distributed targets), or absent
+            entirely (serial targets) -- Theorem 8's O(k) as a lint
+TRIP-001    statically-sized chunk loops carry ``known_trip_count``
+            and the number of dynamic-trip whiles matches the design
+            (the one num_steps fori_loop; zero for the decode scan)
+
+Findings can only be waived through :data:`SUPPRESSIONS`, each entry
+carrying a non-empty justification string; an unsuppressed finding
+fails the CI gate (``python -m repro.analysis.run``).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Callable, NamedTuple
+
+from repro.utils import hlo_analysis as ha
+
+RULES = {
+    "DONATE-001": "donated buffers appear in input_output_alias",
+    "HOST-001": "no host transfers inside while bodies",
+    "DTYPE-001": "no f64/c128 ops in compiled modules",
+    "COMM-001": "loop collectives within the CommModel budget",
+    "TRIP-001": "static chunk loops carry known_trip_count",
+}
+
+
+class Finding(NamedTuple):
+    rule: str
+    target: str
+    detail: str
+
+
+class Suppression(NamedTuple):
+    rule: str
+    target: str
+    justification: str
+
+
+#: The ONLY way to waive a finding.  Every entry must carry a real
+#: justification; an empty one is itself an error (enforced in
+#: apply_suppressions), so waivers stay reviewable.
+SUPPRESSIONS: tuple[Suppression, ...] = ()
+
+
+def apply_suppressions(
+        findings: list[Finding],
+        suppressions: tuple[Suppression, ...] = SUPPRESSIONS,
+) -> tuple[list[Finding], list[dict]]:
+    """Split findings into (unsuppressed, suppressed-records)."""
+    for s in suppressions:
+        if not s.justification.strip():
+            raise ValueError(
+                f"suppression {s.rule}/{s.target} has no justification")
+    live, waived = [], []
+    for f in findings:
+        match = next((s for s in suppressions
+                      if s.rule == f.rule and s.target == f.target), None)
+        if match is None:
+            live.append(f)
+        else:
+            waived.append({**f._asdict(),
+                           "justification": match.justification})
+    return live, waived
+
+
+# ----------------------------------------------------------------- rules
+
+def donated_params(hlo_text: str) -> set[int]:
+    """Parameter numbers aliased to outputs in the compiled module
+    header (``input_output_alias={ {i}: (p, {...}, may-alias), ... }``,
+    balanced-brace scanned)."""
+    i = hlo_text.find("input_output_alias=")
+    if i < 0:
+        return set()
+    j = hlo_text.index("{", i)
+    depth, k = 0, j
+    while True:
+        if hlo_text[k] == "{":
+            depth += 1
+        elif hlo_text[k] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+        k += 1
+    return {int(m) for m in re.findall(r"\(\s*(\d+)\s*,",
+                                       hlo_text[j:k + 1])}
+
+
+def check_donation(hlo_text: str, target: str,
+                   min_donated: int) -> list[Finding]:
+    got = len(donated_params(hlo_text))
+    if got < min_donated:
+        return [Finding(
+            "DONATE-001", target,
+            f"only {got} parameters aliased to outputs, expected >= "
+            f"{min_donated} donated state leaves (donation dropped -> "
+            "state memory doubled per chunk)")]
+    return []
+
+
+_HOST_OP_RE = re.compile(
+    r"\s(infeed|outfeed|send|recv)(?:-done)?\(")
+_CUSTOM_RE = re.compile(r'custom-call.*custom_call_target="([^"]+)"')
+_HOST_TARGET_RE = re.compile(r"host|callback|python", re.I)
+_CALLEE_RE = re.compile(r"(?:to_apply|body|condition)=%?([\w.\-]+)")
+
+
+def check_host(hlo_text: str, target: str) -> list[Finding]:
+    """Walk every while body (transitively through called
+    computations) looking for host transfers."""
+    comps = ha.split_computations(hlo_text)
+    findings: list[Finding] = []
+    seen: set[str] = set()
+    stack = [w.body for w in ha.while_records(hlo_text)]
+    while stack:
+        name = stack.pop()
+        if name in seen or name not in comps:
+            continue
+        seen.add(name)
+        for line in comps[name]:
+            m = _HOST_OP_RE.search(line)
+            if m:
+                findings.append(Finding(
+                    "HOST-001", target,
+                    f"{m.group(1)} inside loop body {name}: "
+                    f"{line[:100]}"))
+            m = _CUSTOM_RE.search(line)
+            if m and _HOST_TARGET_RE.search(m.group(1)):
+                findings.append(Finding(
+                    "HOST-001", target,
+                    f"host custom-call {m.group(1)!r} inside loop "
+                    f"body {name}"))
+            stack.extend(_CALLEE_RE.findall(line))
+    return findings
+
+
+_WIDE_DTYPE_RE = re.compile(r"\b(f64|c128)\[")
+
+
+def check_dtype(hlo_text: str, target: str) -> list[Finding]:
+    for line in hlo_text.splitlines():
+        m = _WIDE_DTYPE_RE.search(line)
+        if m:
+            return [Finding(
+                "DTYPE-001", target,
+                f"{m.group(1)} op in compiled module: "
+                f"{line.strip()[:100]}")]
+    return []
+
+
+def check_comm_serial(hlo_text: str, target: str) -> list[Finding]:
+    recs = ha.collective_records(hlo_text)
+    if recs:
+        ops = sorted({r.op for r in recs})
+        return [Finding(
+            "COMM-001", target,
+            f"serial target compiles {len(recs)} collectives "
+            f"({', '.join(ops)}); expected none")]
+    return []
+
+
+def check_comm_model(hlo_text: str, target: str, model,
+                     block_size: int) -> list[Finding]:
+    """Measured per-iteration collectives must be a sub-multiset of
+    the analytic CommModel prediction (Theorem 8's O(k) budget)."""
+    from repro.utils import comm_audit
+
+    counts = comm_audit.audit_hlo(hlo_text, has_step_loop=True)
+    predicted = model.collective_multiset(block_size)
+    excess = {k: (v, predicted.get(k, 0))
+              for k, v in counts.per_iteration.items()
+              if v > predicted.get(k, 0)}
+    if excess:
+        return [Finding(
+            "COMM-001", target,
+            "per-iteration collectives exceed the CommModel budget: "
+            + "; ".join(
+                f"{k} measured {v} > budget {b}"
+                for k, (v, b) in sorted(excess.items(), key=str)))]
+    return []
+
+
+def check_trips(hlo_text: str, target: str,
+                static_trips: tuple[int, ...],
+                max_dynamic_whiles: int) -> list[Finding]:
+    whiles = ha.while_records(hlo_text)
+    known = [w.trip_count for w in whiles if w.trip_count is not None]
+    findings = []
+    for t in static_trips:
+        if t not in known:
+            findings.append(Finding(
+                "TRIP-001", target,
+                f"no while carries known_trip_count={t} (static chunk "
+                f"loop lost its bound; known trips: {sorted(known)})"))
+    dynamic = sum(1 for w in whiles if w.trip_count is None)
+    if dynamic > max_dynamic_whiles:
+        findings.append(Finding(
+            "TRIP-001", target,
+            f"{dynamic} dynamic-trip while loops, design allows "
+            f"{max_dynamic_whiles} (the num_steps chunk loop)"))
+    return findings
+
+
+# --------------------------------------------------------------- targets
+
+class LintTarget(NamedTuple):
+    name: str
+    build: Callable[[], str]          # -> compiled HLO text
+    min_donated: int
+    comm: object                      # "serial" | (CommModel, block)
+    static_trips: tuple[int, ...]
+    max_dynamic_whiles: int
+
+
+def _build_run_chunk_packed() -> str:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import engine, saddle
+    from repro.core import preprocess as pp
+
+    n1, n2, d = 500, 460, 256
+    params = saddle.make_params(n1 + n2, d, 1e-3, 0.1,
+                                nu=1.0 / (0.8 * n1), block_size=128)
+    n_pad = pp.packed_length(n1 + n2)
+    state = jax.eval_shape(
+        lambda: engine.init_packed_state(jnp.ones((n_pad,)), n1, n2, d))
+    key = jax.eval_shape(lambda: jax.random.key(0))
+    return engine.run_chunk_packed.lower(
+        state, key,
+        jax.ShapeDtypeStruct((d, n_pad), jnp.float32),
+        jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        params=params, chunk_steps=8).compile().as_text()
+
+
+def _build_run_chunk_slots() -> str:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import engine
+
+    s, n_pad, d = 2, 256, 32
+    state = jax.eval_shape(lambda: engine.init_slot_state(s, n_pad, d))
+    sp = engine.SlotParams(*(jax.ShapeDtypeStruct((s,), jnp.float32)
+                             for _ in engine.SlotParams._fields))
+    return engine.run_chunk_slots.lower(
+        state,
+        jax.ShapeDtypeStruct((s, d, n_pad), jnp.float32),
+        jax.ShapeDtypeStruct((s, n_pad), jnp.float32),
+        sp,
+        jax.ShapeDtypeStruct((), jnp.int32),
+        chunk_steps=4, d=d, block_size=1, project=True,
+        check_gap=True).compile().as_text()
+
+
+def _build_sharded_runner(k: int = 8) -> str:
+    import jax
+
+    from repro.core.engine import CLIENT_AXIS
+    from repro.utils import comm_audit
+
+    fn, args = comm_audit.runner_lowerable(
+        comm_audit.client_mesh(k), CLIENT_AXIS, n1=1000, n2=900, d=128,
+        nu=1.0 / (0.8 * 1000), block_size=128, chunk_steps=8)
+    # donate like distributed.make_sharded_runner does in production
+    return jax.jit(fn, donate_argnums=(0,)).lower(
+        *args).compile().as_text()
+
+
+LM_ARCH = "gemma-7b"      # smallest bucketable (all-attn) config
+LM_SLOTS = 2
+LM_CHUNK = 4
+LM_MAX_LEN = 32
+
+
+def _lm_structs():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import transformer as tf
+    from repro.serve import engine as serve_engine
+
+    cfg = get_config(LM_ARCH).reduced()
+    params = jax.eval_shape(lambda: tf.init_lm(jax.random.key(0), cfg))
+    toks = jax.ShapeDtypeStruct((1, 8), jnp.int32)
+    true_len = jax.ShapeDtypeStruct((), jnp.int32)
+    pre = jax.eval_shape(
+        lambda p, t, n: serve_engine._prefill_bucketed(
+            p, cfg, t, n, max_len=LM_MAX_LEN), params, toks, true_len)
+    state = jax.eval_shape(
+        lambda p: serve_engine.init_lm_slot_state(p, LM_SLOTS), pre)
+    return cfg, params, toks, true_len, state
+
+
+def _build_prefill_bucketed() -> str:
+    from repro.serve import engine as serve_engine
+
+    cfg, params, toks, true_len, _ = _lm_structs()
+    return serve_engine._prefill_bucketed.lower(
+        params, cfg, toks, true_len,
+        max_len=LM_MAX_LEN).compile().as_text()
+
+
+def _build_decode_chunk_slots() -> str:
+    from repro.serve import engine as serve_engine
+
+    cfg, params, _, _, state = _lm_structs()
+    return serve_engine.decode_chunk_slots.lower(
+        params, state, cfg=cfg, chunk_steps=LM_CHUNK, temperature=0.0,
+        max_len=LM_MAX_LEN).compile().as_text()
+
+
+def _lm_state_leaves() -> int:
+    import jax
+
+    return len(jax.tree.leaves(_lm_structs()[4]))
+
+
+def _comm_model(k: int, nu: float):
+    from repro.core import projections
+    from repro.core.distributed import CommModel
+
+    rounds = float(projections.BISECT_ROUNDS_SOLVER) if nu > 0 else 0.0
+    return CommModel(k=k, nu_rounds_per_iter=rounds)
+
+
+def default_targets() -> list[LintTarget]:
+    """The hot paths linted on every gate run.  Expected counts:
+    PackedState has 5 leaves, SlotState 8, the sharded runner donates
+    the 5-leaf replicated-state pytree; the decode chunk is a static
+    ``scan`` (zero dynamic whiles), the solver chunks one dynamic
+    num_steps fori_loop; 24 = projections.BISECT_ROUNDS_SOLVER."""
+    from repro.core import projections
+
+    rounds = int(projections.BISECT_ROUNDS_SOLVER)
+    return [
+        LintTarget("engine.run_chunk_packed", _build_run_chunk_packed,
+                   min_donated=5, comm="serial",
+                   static_trips=(rounds,), max_dynamic_whiles=1),
+        LintTarget("engine.run_chunk_slots", _build_run_chunk_slots,
+                   min_donated=8, comm="serial",
+                   static_trips=(rounds,), max_dynamic_whiles=1),
+        LintTarget("distributed.sharded_run_fn[k=8]",
+                   lambda: _build_sharded_runner(8),
+                   min_donated=5,
+                   comm=(_comm_model(8, 1.0), 128),
+                   static_trips=(rounds,), max_dynamic_whiles=1),
+        LintTarget(f"serve._prefill_bucketed[{LM_ARCH}]",
+                   _build_prefill_bucketed,
+                   min_donated=0, comm="serial",
+                   static_trips=(), max_dynamic_whiles=0),
+        LintTarget(f"serve.decode_chunk_slots[{LM_ARCH}]",
+                   _build_decode_chunk_slots,
+                   min_donated=_lm_state_leaves(), comm="serial",
+                   static_trips=(LM_CHUNK,), max_dynamic_whiles=0),
+    ]
+
+
+def dryrun_mesh_targets() -> list[LintTarget]:
+    """Production-mesh lowerings of both dry-run shapes (k=256 single
+    pod, k=512 multi-pod).  Needs 512 forced host devices
+    (run.py --dryrun-meshes sets XLA_FLAGS before importing jax)."""
+    import math
+
+    from repro.launch import mesh as mesh_mod
+    from repro.launch.specs import (SADDLE_DSVC_SHAPES,
+                                    build_saddle_dsvc_lowerable)
+
+    targets = []
+    for multi_pod in (False, True):
+        mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+        k = int(math.prod(mesh.devices.shape))
+        for shape in SADDLE_DSVC_SHAPES.values():
+
+            def build(mesh=mesh, shape=shape):
+                import jax
+
+                fn, args, _ = build_saddle_dsvc_lowerable(mesh, shape)
+                return jax.jit(fn, donate_argnums=(0,)).lower(
+                    *args).compile().as_text()
+
+            nu = 1.0 if shape.nu_frac else 0.0
+            trips = ((int(_comm_model(k, nu).nu_rounds_per_iter),)
+                     if nu else ())
+            targets.append(LintTarget(
+                f"dryrun.{shape.name}[k={k}]", build,
+                min_donated=5,
+                comm=(_comm_model(k, nu), shape.block_size),
+                static_trips=trips, max_dynamic_whiles=1))
+    return targets
+
+
+def lint_target(t: LintTarget) -> tuple[dict, list[Finding]]:
+    hlo = t.build()
+    findings: list[Finding] = []
+    findings += check_donation(hlo, t.name, t.min_donated)
+    findings += check_host(hlo, t.name)
+    findings += check_dtype(hlo, t.name)
+    if t.comm == "serial":
+        findings += check_comm_serial(hlo, t.name)
+    elif t.comm is not None:
+        model, block = t.comm
+        findings += check_comm_model(hlo, t.name, model, block)
+    findings += check_trips(hlo, t.name, t.static_trips,
+                            t.max_dynamic_whiles)
+    record = {
+        "target": t.name,
+        "donated": len(donated_params(hlo)),
+        "whiles": [w.trip_count for w in ha.while_records(hlo)],
+        "collectives": len(ha.collective_records(hlo)),
+        "findings": len(findings),
+    }
+    return record, findings
+
+
+def lint_all(targets: list[LintTarget] | None = None,
+             ) -> tuple[list[dict], list[Finding]]:
+    if targets is None:
+        targets = default_targets()
+    records, findings = [], []
+    for t in targets:
+        rec, fs = lint_target(t)
+        records.append(rec)
+        findings.extend(fs)
+    return records, findings

@@ -1,3 +1,20 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+
+def default_interpret() -> bool:
+    """Pallas ``interpret=`` default: real kernels on TPU, interpreter
+    everywhere else.
+
+    The BlockSpecs are TPU-shaped (lane-aligned tiles, full-d VMEM
+    blocks), so on a TPU build the kernels compile for real without any
+    flag threading; CPU/GPU hosts (this container) fall back to the
+    interpreter, which is what every parity test runs against.  The
+    static shape discipline the compiled path needs is proven
+    separately by :mod:`repro.analysis.pallas_audit` over the same
+    program builders the launches use.
+    """
+    import jax
+
+    return jax.default_backend() != "tpu"

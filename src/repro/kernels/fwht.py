@@ -10,6 +10,11 @@ of log d round trips (DESIGN.md section 2).
 
 Grid: one program per tile of TILE_N points; the full d axis lives in
 the block (d is a power of two, padded by the caller).
+
+Like :mod:`repro.kernels.saddle_update`, the launch consumes
+:func:`fwht_program` -- the registry entry the static auditor
+(:mod:`repro.analysis.pallas_audit`) verifies -- so the audited
+BlockSpecs are the launched BlockSpecs.
 """
 
 from __future__ import annotations
@@ -19,6 +24,48 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import default_interpret
+
+F32_BYTES = 4
+
+
+def auto_tile_n(n: int, d: int) -> int:
+    """Largest row tile keeping the (TILE_N, d) working set (block +
+    butterfly temps) under ~4 MiB of VMEM, floored at 8 rows."""
+    budget = 4 * 1024 * 1024 // (F32_BYTES * max(d, 1))  # fp32 rows
+    tile_n = max(8, min(256, 1 << max(budget - 1, 1).bit_length() - 1))
+    tile_n = min(tile_n, max(8, budget))
+    return tile_n
+
+
+def fwht_program(*, n_pad: int, d: int, tile_n: int) -> dict:
+    """Kernel program (see pallas_audit's registry contract): one grid
+    step per TILE_N-row block, identity in->out blocking over the full
+    d axis.  ``extra_vmem_bytes`` covers the butterfly's a+b / a-b
+    stack temporaries (~2 extra block copies live at a stage boundary).
+    """
+    if tile_n <= 0 or n_pad % tile_n:
+        raise ValueError(
+            f"tile_n {tile_n} must evenly divide padded length {n_pad}")
+    if d & (d - 1) or d <= 0:
+        raise ValueError(f"d must be a power of two, got {d}")
+    grid = (n_pad // tile_n,)
+    return dict(
+        name="fwht",
+        grid=grid,
+        num_scalar_prefetch=0,
+        prefetch_length=None,
+        prefetch_bound=None,
+        in_shapes=[(n_pad, d)],
+        in_specs=[pl.BlockSpec((tile_n, d), lambda i: (i, 0))],
+        out_shapes=[(n_pad, d)],
+        out_specs=[pl.BlockSpec((tile_n, d), lambda i: (i, 0))],
+        scratch_shapes=[],
+        scratch_bytes=0,
+        extra_vmem_bytes=2 * F32_BYTES * tile_n * d,
+        accum_axes={},
+    )
 
 
 def _fwht_kernel(x_ref, o_ref, *, d: int, normalize: bool):
@@ -39,30 +86,38 @@ def _fwht_kernel(x_ref, o_ref, *, d: int, normalize: bool):
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "normalize",
                                              "interpret"))
-def fwht_pallas(x: jax.Array, *, tile_n: int = 0, normalize: bool = True,
-                interpret: bool = True) -> jax.Array:
-    """Walsh--Hadamard transform along the last axis of (n, d) ``x``.
-
-    d must be a power of two.  ``tile_n=0`` picks the largest tile that
-    keeps the working set under ~4 MiB of VMEM (x + butterfly temps).
-    """
+def _fwht_jit(x: jax.Array, *, tile_n: int, normalize: bool,
+              interpret: bool) -> jax.Array:
     n, d = x.shape
-    if d & (d - 1):
-        raise ValueError(f"d must be a power of two, got {d}")
-    if tile_n == 0:
-        budget = 4 * 1024 * 1024 // (4 * max(d, 1))  # fp32 bytes per row
-        tile_n = max(8, min(256, 1 << max(budget - 1, 1).bit_length() - 1))
-        tile_n = min(tile_n, max(8, budget))
     tile_n = min(tile_n, n) if n >= 8 else n
     pad = (-n) % tile_n
     xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
-    grid = (xp.shape[0] // tile_n,)
+    prog = fwht_program(n_pad=xp.shape[0], d=d, tile_n=tile_n)
     out = pl.pallas_call(
         functools.partial(_fwht_kernel, d=d, normalize=normalize),
-        grid=grid,
-        in_specs=[pl.BlockSpec((tile_n, d), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        grid=prog["grid"],
+        in_specs=prog["in_specs"],
+        out_specs=prog["out_specs"][0],
+        out_shape=jax.ShapeDtypeStruct(prog["out_shapes"][0], x.dtype),
         interpret=interpret,
     )(xp)
     return out[:n] if pad else out
+
+
+def fwht_pallas(x: jax.Array, *, tile_n: int = 0, normalize: bool = True,
+                interpret: bool | None = None) -> jax.Array:
+    """Walsh--Hadamard transform along the last axis of (n, d) ``x``.
+
+    d must be a power of two (fail-fast ValueError otherwise).
+    ``tile_n=0`` picks :func:`auto_tile_n`; ``interpret=None`` resolves
+    via :func:`repro.kernels.default_interpret` (real kernel on TPU).
+    """
+    n, d = x.shape
+    if d & (d - 1) or d <= 0:
+        raise ValueError(f"d must be a power of two, got {d}")
+    if tile_n == 0:
+        tile_n = auto_tile_n(n, d)
+    if interpret is None:
+        interpret = default_interpret()
+    return _fwht_jit(x, tile_n=tile_n, normalize=normalize,
+                     interpret=interpret)

@@ -1,8 +1,13 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True because this container is CPU-only; on a
-real TPU build, pass interpret=False (the BlockSpecs are TPU-shaped:
-lane-aligned tiles, full-d VMEM blocks for the FWHT butterfly).
+``interpret=None`` (the default everywhere) resolves through
+:func:`repro.kernels.default_interpret`: real compiled kernels when
+``jax.default_backend() == "tpu"``, the Pallas interpreter otherwise
+(this container is CPU-only).  The resolution happens OUTSIDE the jitted
+kernel impls, so the static ``interpret`` cache key is always a concrete
+bool.  The TPU-shaped BlockSpec discipline the compiled path relies on
+is statically verified by ``repro.analysis.pallas_audit`` over the same
+program builders the launches use.
 
 ``launch_counts`` tallies pallas_call launches per wrapper at TRACE
 time (one wrapper call == one kernel launch in the compiled step).
@@ -25,7 +30,7 @@ launch_counts: collections.Counter = collections.Counter()
 
 
 def fwht(x: jax.Array, *, normalize: bool = True,
-         interpret: bool = True) -> jax.Array:
+         interpret: bool | None = None) -> jax.Array:
     """Tiled Walsh--Hadamard transform (rows of (n, d), d a power of 2)."""
     launch_counts["fwht"] += 1
     squeeze = x.ndim == 1
@@ -35,14 +40,14 @@ def fwht(x: jax.Array, *, normalize: bool = True,
     return out[0] if squeeze else out
 
 
-def momentum_dot(cols, log_lam, log_prev, theta, *, interpret=True):
+def momentum_dot(cols, log_lam, log_prev, theta, *, interpret=None):
     launch_counts["momentum_dot"] += 1
     return _su.momentum_dot(cols, log_lam, log_prev, theta,
                             interpret=interpret)
 
 
 def mwu_update(cols, log_lam, u, dw, *, sign, gamma, tau, d_eff,
-               interpret=True, normalize=True):
+               interpret=None, normalize=True):
     """Fused dual update; ``normalize=False`` returns the unnormalized
     log weights plus (m, s) normalizer partials with lse = m + log(s)
     (used by the solver engine to all-reduce across clients)."""
@@ -54,7 +59,7 @@ def mwu_update(cols, log_lam, u, dw, *, sign, gamma, tau, d_eff,
 
 
 def momentum_dot_packed(x_t, idx, log_lam, log_prev, sign, theta, *,
-                        interpret=True):
+                        interpret=None):
     """Single-sweep signed momentum dot over the packed operand; the
     coordinate block is gathered from the raw column-major mirror
     inside the kernel (scalar-prefetched indices)."""
@@ -64,7 +69,7 @@ def momentum_dot_packed(x_t, idx, log_lam, log_prev, sign, theta, *,
 
 
 def mwu_update_packed(x_t, idx, log_lam, u, dw, sign, *, gamma, tau,
-                      d_eff, interpret=True):
+                      d_eff, interpret=None):
     """Single-sweep packed dual update.  Returns (log_new_unnormalized,
     u_new, m_p, s_p, m_m, s_m) with per-class lse = m + log(s)."""
     launch_counts["mwu_update_packed"] += 1

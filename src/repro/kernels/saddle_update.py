@@ -32,6 +32,13 @@ reference/legacy path the packed engine is parity-tested against.
 B = 1 is the paper-faithful single-coordinate mode; B = 128 is the
 beyond-paper lane-aligned block mode where the inner product becomes an
 MXU matvec.
+
+Every ``pl.pallas_call`` here builds its grid/BlockSpecs through a
+``*_program`` builder (the registry contract of
+:mod:`repro.analysis.pallas_audit`): the builder returns the EXACT grid,
+in/out specs, shapes, scratch and accumulation metadata the launch uses,
+so the static auditor proves properties of the real kernel programs, not
+of a parallel description that could drift.
 """
 
 from __future__ import annotations
@@ -44,7 +51,161 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import default_interpret
+
 NEG = -1e30
+
+F32_BYTES = 4
+
+
+def _check_tiling(n_pad: int, tile: int) -> None:
+    if tile <= 0 or n_pad % tile:
+        raise ValueError(
+            f"tile {tile} must evenly divide padded length {n_pad}")
+
+
+# ==========================================================================
+# Program builders -- single source of truth for grid + BlockSpecs.
+#
+# Each returns a dict (a "kernel program") consumed BOTH by the
+# pallas_call launch below and by repro.analysis.pallas_audit:
+#   grid                 -- pallas grid tuple
+#   num_scalar_prefetch  -- 0, or 1 when index maps take a prefetched idx
+#   prefetch_length/bound-- idx vector length b and exclusive value bound d
+#   in_shapes/out_shapes -- full (unblocked) operand/result shapes
+#   in_specs/out_specs   -- the pl.BlockSpec lists passed to pallas_call
+#   scratch_shapes       -- pltpu scratch allocations for the launch
+#   scratch_bytes        -- their total VMEM footprint
+#   extra_vmem_bytes     -- kernel-private temporaries beyond blocks+scratch
+#   accum_axes           -- {out position: grid axes along which output
+#                           block revisits are legal accumulation}
+# Shapes are element counts; the auditor budgets 4 bytes/element (f32 --
+# an upper bound for the bf16 variants).
+# ==========================================================================
+
+
+def momentum_dot_program(*, n_pad: int, b: int, tile: int) -> dict:
+    _check_tiling(n_pad, tile)
+    grid = (n_pad // tile,)
+    return dict(
+        name="momentum_dot",
+        grid=grid,
+        num_scalar_prefetch=0,
+        prefetch_length=None,
+        prefetch_bound=None,
+        in_shapes=[(n_pad, b), (n_pad,), (n_pad,), (1,)],
+        in_specs=[
+            pl.BlockSpec((tile, b), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shapes=[(grid[0], b)],
+        out_specs=[pl.BlockSpec((1, b), lambda i: (i, 0))],
+        scratch_shapes=[],
+        scratch_bytes=0,
+        extra_vmem_bytes=F32_BYTES * tile * b,    # mom-weighted cols temp
+        accum_axes={},
+    )
+
+
+def mwu_update_program(*, n_pad: int, b: int, tile: int) -> dict:
+    _check_tiling(n_pad, tile)
+    grid = (n_pad // tile,)
+    return dict(
+        name="mwu_update",
+        grid=grid,
+        num_scalar_prefetch=0,
+        prefetch_length=None,
+        prefetch_bound=None,
+        in_shapes=[(n_pad, b), (n_pad,), (n_pad,), (b,), (4,)],
+        in_specs=[
+            pl.BlockSpec((tile, b), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_shapes=[(n_pad,), (n_pad,), (grid[0],), (grid[0],)],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        scratch_shapes=[],
+        scratch_bytes=0,
+        extra_vmem_bytes=F32_BYTES * tile * 3,    # dv, v, log_new temps
+        accum_axes={},
+    )
+
+
+def momentum_dot_packed_program(*, n_pad: int, d: int, b: int,
+                                tile: int) -> dict:
+    _check_tiling(n_pad, tile)
+    grid = (n_pad // tile, b)
+    return dict(
+        name="momentum_dot_packed",
+        grid=grid,
+        num_scalar_prefetch=1,
+        prefetch_length=b,
+        prefetch_bound=d,
+        in_shapes=[(d, n_pad), (n_pad,), (n_pad,), (n_pad,), (1,)],
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i, j, idx: (idx[j], i)),
+            pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
+            pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
+            pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
+            pl.BlockSpec((1,), lambda i, j, idx: (0,)),
+        ],
+        out_shapes=[(grid[0], b)],
+        out_specs=[pl.BlockSpec((1, 1), lambda i, j, idx: (i, j))],
+        scratch_shapes=[pltpu.VMEM((tile,), jnp.float32)],
+        scratch_bytes=F32_BYTES * tile,
+        extra_vmem_bytes=F32_BYTES * tile,        # x_row * mom product temp
+        accum_axes={},
+    )
+
+
+def mwu_update_packed_program(*, n_pad: int, d: int, b: int,
+                              tile: int) -> dict:
+    _check_tiling(n_pad, tile)
+    grid = (n_pad // tile, b)
+    return dict(
+        name="mwu_update_packed",
+        grid=grid,
+        num_scalar_prefetch=1,
+        prefetch_length=b,
+        prefetch_bound=d,
+        in_shapes=[(d, n_pad), (b,), (n_pad,), (n_pad,), (n_pad,), (3,)],
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i, j, idx: (idx[j], i)),
+            pl.BlockSpec((b,), lambda i, j, idx: (0,)),
+            pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
+            pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
+            pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
+            pl.BlockSpec((3,), lambda i, j, idx: (0,)),
+        ],
+        out_shapes=[(n_pad,), (n_pad,), (grid[0], 4)],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
+            pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
+            pl.BlockSpec((1, 4), lambda i, j, idx: (i, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((tile,), jnp.float32)],
+        scratch_bytes=F32_BYTES * tile,
+        # j == nb-1 epilogue: v, log_new, per-class masks/exp temps
+        extra_vmem_bytes=F32_BYTES * tile * 4,
+        # every output is written once per tile row i (at j == nb-1 /
+        # identically revisited), so revisits along grid axis 1 (the b
+        # block-coordinate walk) are declared accumulation, not races
+        accum_axes={0: (1,), 1: (1,), 2: (1,)},
+    )
+
+
+# ==========================================================================
+# Unpacked per-class kernels (legacy/reference path, 4 launches per step)
+# ==========================================================================
 
 
 def _momentum_dot_kernel(cols_ref, log_lam_ref, log_prev_ref, theta_ref,
@@ -58,10 +219,8 @@ def _momentum_dot_kernel(cols_ref, log_lam_ref, log_prev_ref, theta_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
-def momentum_dot(cols: jax.Array, log_lam: jax.Array, log_prev: jax.Array,
-                 theta: jax.Array, *, tile: int = 1024,
-                 interpret: bool = True) -> jax.Array:
-    """delta (B,) = cols^T (lam + theta (lam - lam_prev)), tiled over n."""
+def _momentum_dot_jit(cols, log_lam, log_prev, theta, *, tile: int,
+                      interpret: bool) -> jax.Array:
     n, b = cols.shape
     tile = min(tile, max(n, 1))
     pad = (-n) % tile
@@ -69,22 +228,27 @@ def momentum_dot(cols: jax.Array, log_lam: jax.Array, log_prev: jax.Array,
         cols = jnp.pad(cols, ((0, pad), (0, 0)))
         log_lam = jnp.pad(log_lam, (0, pad), constant_values=NEG)
         log_prev = jnp.pad(log_prev, (0, pad), constant_values=NEG)
-    grid = (cols.shape[0] // tile,)
+    prog = momentum_dot_program(n_pad=cols.shape[0], b=b, tile=tile)
     theta = jnp.asarray(theta, cols.dtype).reshape(1)
     parts = pl.pallas_call(
         _momentum_dot_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((tile, b), lambda i: (i, 0)),
-            pl.BlockSpec((tile,), lambda i: (i,)),
-            pl.BlockSpec((tile,), lambda i: (i,)),
-            pl.BlockSpec((1,), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec((1, b), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((grid[0], b), cols.dtype),
+        grid=prog["grid"],
+        in_specs=prog["in_specs"],
+        out_specs=prog["out_specs"][0],
+        out_shape=jax.ShapeDtypeStruct(prog["out_shapes"][0], cols.dtype),
         interpret=interpret,
     )(cols, log_lam, log_prev, theta)
     return parts.sum(axis=0)
+
+
+def momentum_dot(cols: jax.Array, log_lam: jax.Array, log_prev: jax.Array,
+                 theta: jax.Array, *, tile: int = 1024,
+                 interpret: bool | None = None) -> jax.Array:
+    """delta (B,) = cols^T (lam + theta (lam - lam_prev)), tiled over n."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _momentum_dot_jit(cols, log_lam, log_prev, theta, tile=tile,
+                             interpret=interpret)
 
 
 def _mwu_kernel(cols_ref, log_lam_ref, u_ref, dw_ref, scal_ref,
@@ -108,14 +272,8 @@ def _mwu_kernel(cols_ref, log_lam_ref, u_ref, dw_ref, scal_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("tile", "interpret", "normalize"))
-def mwu_update(cols: jax.Array, log_lam: jax.Array, u: jax.Array,
-               dw: jax.Array, sign: jax.Array, gamma: jax.Array,
-               tau: jax.Array, d_eff: jax.Array, *, tile: int = 1024,
-               interpret: bool = True, normalize: bool = True):
-    """Fused dual update.  Returns (log_new_normalized, u_new), or --
-    with ``normalize=False`` -- (log_new_unnormalized, u_new, m, s)
-    where lse = m + log(s), so a caller can combine the normalizer
-    partials across clients (distributed rounds 2-3) before applying."""
+def _mwu_update_jit(cols, log_lam, u, dw, sign, gamma, tau, d_eff, *,
+                    tile: int, interpret: bool, normalize: bool):
     n, b = cols.shape
     tile = min(tile, max(n, 1))
     pad = (-n) % tile
@@ -123,32 +281,16 @@ def mwu_update(cols: jax.Array, log_lam: jax.Array, u: jax.Array,
         cols = jnp.pad(cols, ((0, pad), (0, 0)))
         log_lam = jnp.pad(log_lam, (0, pad), constant_values=NEG)
         u = jnp.pad(u, (0, pad))
-    npad = cols.shape[0]
-    grid = (npad // tile,)
+    prog = mwu_update_program(n_pad=cols.shape[0], b=b, tile=tile)
     scal = jnp.stack([jnp.asarray(s, cols.dtype)
                       for s in (sign, gamma, tau, d_eff)])
     log_new, u_new, pmax, psum = pl.pallas_call(
         _mwu_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((tile, b), lambda i: (i, 0)),
-            pl.BlockSpec((tile,), lambda i: (i,)),
-            pl.BlockSpec((tile,), lambda i: (i,)),
-            pl.BlockSpec((b,), lambda i: (0,)),
-            pl.BlockSpec((4,), lambda i: (0,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((tile,), lambda i: (i,)),
-            pl.BlockSpec((tile,), lambda i: (i,)),
-            pl.BlockSpec((1,), lambda i: (i,)),
-            pl.BlockSpec((1,), lambda i: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((npad,), cols.dtype),
-            jax.ShapeDtypeStruct((npad,), cols.dtype),
-            jax.ShapeDtypeStruct((grid[0],), cols.dtype),
-            jax.ShapeDtypeStruct((grid[0],), cols.dtype),
-        ],
+        grid=prog["grid"],
+        in_specs=prog["in_specs"],
+        out_specs=prog["out_specs"],
+        out_shape=[jax.ShapeDtypeStruct(s, cols.dtype)
+                   for s in prog["out_shapes"]],
         interpret=interpret,
     )(cols, log_lam, u, dw, scal)
     # combine per-tile (max, sumexp) partials into the global logsumexp
@@ -157,6 +299,21 @@ def mwu_update(cols: jax.Array, log_lam: jax.Array, u: jax.Array,
     if not normalize:
         return log_new[:n], u_new[:n], m, s
     return (log_new - (m + jnp.log(s)))[:n], u_new[:n]
+
+
+def mwu_update(cols: jax.Array, log_lam: jax.Array, u: jax.Array,
+               dw: jax.Array, sign: jax.Array, gamma: jax.Array,
+               tau: jax.Array, d_eff: jax.Array, *, tile: int = 1024,
+               interpret: bool | None = None, normalize: bool = True):
+    """Fused dual update.  Returns (log_new_normalized, u_new), or --
+    with ``normalize=False`` -- (log_new_unnormalized, u_new, m, s)
+    where lse = m + log(s), so a caller can combine the normalizer
+    partials across clients (distributed rounds 2-3) before applying."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _mwu_update_jit(cols, log_lam, u, dw, sign, gamma, tau, d_eff,
+                           tile=tile, interpret=interpret,
+                           normalize=normalize)
 
 
 # --------------------------------------------------------------------------
@@ -192,37 +349,39 @@ def _momentum_dot_packed_kernel(idx_ref, x_row_ref, log_lam_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
-def momentum_dot_packed(x_t: jax.Array, idx: jax.Array, log_lam: jax.Array,
-                        log_prev: jax.Array, sign: jax.Array,
-                        theta: jax.Array, *, tile: int = 1024,
-                        interpret: bool = True) -> jax.Array:
-    """delta (b,) = sum_i sign_i mom_i x_t[idx, i] -- lines 2-3 of
-    Algorithm 2 for BOTH classes in one sweep, gathering the coordinate
-    block from the raw column-major mirror inside the kernel."""
+def _momentum_dot_packed_jit(x_t, idx, log_lam, log_prev, sign, theta, *,
+                             tile: int, interpret: bool) -> jax.Array:
     d, n_pad = x_t.shape
     b = idx.shape[0]
     tile = _packed_tile(n_pad, tile)
-    grid = (n_pad // tile, b)
+    prog = momentum_dot_packed_program(n_pad=n_pad, d=d, b=b, tile=tile)
     theta = jnp.asarray(theta, x_t.dtype).reshape(1)
     parts = pl.pallas_call(
         _momentum_dot_packed_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, tile), lambda i, j, idx: (idx[j], i)),
-                pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
-                pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
-                pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
-                pl.BlockSpec((1,), lambda i, j, idx: (0,)),
-            ],
-            out_specs=pl.BlockSpec((1, 1), lambda i, j, idx: (i, j)),
-            scratch_shapes=[pltpu.VMEM((tile,), jnp.float32)],
+            num_scalar_prefetch=prog["num_scalar_prefetch"],
+            grid=prog["grid"],
+            in_specs=prog["in_specs"],
+            out_specs=prog["out_specs"][0],
+            scratch_shapes=prog["scratch_shapes"],
         ),
-        out_shape=jax.ShapeDtypeStruct((grid[0], b), x_t.dtype),
+        out_shape=jax.ShapeDtypeStruct(prog["out_shapes"][0], x_t.dtype),
         interpret=interpret,
     )(idx, x_t, log_lam, log_prev, sign, theta)
     return parts.sum(axis=0)
+
+
+def momentum_dot_packed(x_t: jax.Array, idx: jax.Array, log_lam: jax.Array,
+                        log_prev: jax.Array, sign: jax.Array,
+                        theta: jax.Array, *, tile: int = 1024,
+                        interpret: bool | None = None) -> jax.Array:
+    """delta (b,) = sum_i sign_i mom_i x_t[idx, i] -- lines 2-3 of
+    Algorithm 2 for BOTH classes in one sweep, gathering the coordinate
+    block from the raw column-major mirror inside the kernel."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _momentum_dot_packed_jit(x_t, idx, log_lam, log_prev, sign,
+                                    theta, tile=tile, interpret=interpret)
 
 
 def _mwu_packed_kernel(idx_ref, x_row_ref, dw_ref, log_lam_ref, u_ref,
@@ -262,45 +421,25 @@ def _mwu_packed_kernel(idx_ref, x_row_ref, dw_ref, log_lam_ref, u_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
-def mwu_update_packed(x_t: jax.Array, idx: jax.Array, log_lam: jax.Array,
-                      u: jax.Array, dw: jax.Array, sign: jax.Array,
-                      gamma: jax.Array, tau: jax.Array, d_eff: jax.Array,
-                      *, tile: int = 1024, interpret: bool = True):
-    """Fused packed dual update (lines 5-6 + incremental u for BOTH
-    classes).  Returns (log_new_unnormalized, u_new, m_p, s_p, m_m, s_m)
-    with per-class lse = m + log(s); the caller combines the partials
-    across clients (distributed rounds 2-3) and normalizes per class."""
+def _mwu_update_packed_jit(x_t, idx, log_lam, u, dw, sign, gamma, tau,
+                           d_eff, *, tile: int, interpret: bool):
     d, n_pad = x_t.shape
     b = idx.shape[0]
     tile = _packed_tile(n_pad, tile)
-    grid = (n_pad // tile, b)
+    prog = mwu_update_packed_program(n_pad=n_pad, d=d, b=b, tile=tile)
     scal = jnp.stack([jnp.asarray(s, x_t.dtype)
                       for s in (gamma, tau, d_eff)])
     log_new, u_new, parts = pl.pallas_call(
         _mwu_packed_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, tile), lambda i, j, idx: (idx[j], i)),
-                pl.BlockSpec((b,), lambda i, j, idx: (0,)),
-                pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
-                pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
-                pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
-                pl.BlockSpec((3,), lambda i, j, idx: (0,)),
-            ],
-            out_specs=[
-                pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
-                pl.BlockSpec((tile,), lambda i, j, idx: (i,)),
-                pl.BlockSpec((1, 4), lambda i, j, idx: (i, 0)),
-            ],
-            scratch_shapes=[pltpu.VMEM((tile,), jnp.float32)],
+            num_scalar_prefetch=prog["num_scalar_prefetch"],
+            grid=prog["grid"],
+            in_specs=prog["in_specs"],
+            out_specs=prog["out_specs"],
+            scratch_shapes=prog["scratch_shapes"],
         ),
-        out_shape=[
-            jax.ShapeDtypeStruct((n_pad,), x_t.dtype),
-            jax.ShapeDtypeStruct((n_pad,), x_t.dtype),
-            jax.ShapeDtypeStruct((grid[0], 4), x_t.dtype),
-        ],
+        out_shape=[jax.ShapeDtypeStruct(s, x_t.dtype)
+                   for s in prog["out_shapes"]],
         interpret=interpret,
     )(idx, x_t, dw, log_lam, u, sign, scal)
     # combine per-tile per-class partials into the two global logsumexps
@@ -309,3 +448,18 @@ def mwu_update_packed(x_t: jax.Array, idx: jax.Array, log_lam: jax.Array,
     m_m = jnp.max(parts[:, 2])
     s_m = jnp.sum(parts[:, 3] * jnp.exp(parts[:, 2] - m_m))
     return log_new, u_new, m_p, s_p, m_m, s_m
+
+
+def mwu_update_packed(x_t: jax.Array, idx: jax.Array, log_lam: jax.Array,
+                      u: jax.Array, dw: jax.Array, sign: jax.Array,
+                      gamma: jax.Array, tau: jax.Array, d_eff: jax.Array,
+                      *, tile: int = 1024, interpret: bool | None = None):
+    """Fused packed dual update (lines 5-6 + incremental u for BOTH
+    classes).  Returns (log_new_unnormalized, u_new, m_p, s_p, m_m, s_m)
+    with per-class lse = m + log(s); the caller combines the partials
+    across clients (distributed rounds 2-3) and normalizes per class."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _mwu_update_packed_jit(x_t, idx, log_lam, u, dw, sign, gamma,
+                                  tau, d_eff, tile=tile,
+                                  interpret=interpret)

@@ -169,6 +169,19 @@ SADDLE_DSVC_SHAPES: dict[str, SaddleDsvcShape] = {
 }
 
 
+def saddle_dsvc_client_shape(shape: SaddleDsvcShape, k: int) -> dict:
+    """Per-client packed shard shape for ``shape`` round-robined over
+    ``k`` clients: the lane-padded point count each client's kernels
+    see (``n_pad``), the feature dim ``d`` and the coordinate block
+    size ``b``.  This is what the static kernel auditor
+    (repro.analysis.pallas_audit) sweeps for the dry-run meshes."""
+    from repro.core.preprocess import packed_length
+
+    m = math.ceil(shape.n1 / k) + math.ceil(shape.n2 / k)
+    return {"n_pad": packed_length(m), "d": shape.d,
+            "b": shape.block_size}
+
+
 def build_saddle_dsvc_lowerable(mesh, shape: SaddleDsvcShape,
                                 backend: str = "jnp"):
     """Returns (fn, args, meta) ready for ``jit(fn).lower(*args)``: the

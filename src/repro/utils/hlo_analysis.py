@@ -30,7 +30,12 @@ _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
     "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "f8e4m3b11fnuz": 1, "s2": 1, "u2": 1, "f4e2m1fn": 1, "f8e8m0fnu": 1,
 }
+
+# dtypes that legitimately carry no payload bytes (sequencing values)
+_ZERO_BYTE_DTYPES = frozenset({"token", "opaque"})
 
 COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
                   "all-to-all", "collective-permute")
@@ -38,17 +43,31 @@ COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 
 
-def _shape_bytes(shape_str: str) -> int:
-    total = 0
+def _shape_parts(shape_str: str) -> list[tuple[str, int]]:
+    """(dtype, element_count) per array in ``shape_str`` (tuple shapes
+    yield one entry per component; zero-byte token/opaque entries are
+    dropped).  An unrecognized dtype is an ERROR, not a skip -- silently
+    under-counting a collective's payload would quietly void every
+    byte-budget downstream."""
+    parts = []
     for dtype, dims in _SHAPE_RE.findall(shape_str):
-        if dtype not in _DTYPE_BYTES:
+        if dtype in _ZERO_BYTE_DTYPES:
             continue
+        if dtype not in _DTYPE_BYTES:
+            raise ValueError(
+                f"unknown HLO dtype {dtype!r} in shape {shape_str!r}; "
+                "add it to hlo_analysis._DTYPE_BYTES")
         n = 1
         if dims:
             for d in dims.split(","):
                 n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
+        parts.append((dtype, n))
+    return parts
+
+
+def _shape_bytes(shape_str: str) -> int:
+    return sum(n * _DTYPE_BYTES[dtype]
+               for dtype, n in _shape_parts(shape_str))
 
 
 class CollectiveStats(NamedTuple):
@@ -154,16 +173,7 @@ def entry_computation(hlo_text: str) -> str:
 
 
 def _shape_elements(shape_str: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(shape_str):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n
-    return total
+    return sum(n for _, n in _shape_parts(shape_str))
 
 
 def _reduce_kind(region_lines: list[str]) -> str:

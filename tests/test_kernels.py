@@ -23,6 +23,49 @@ def test_fwht_kernel_sweep(n, d, dtype):
                                np.asarray(want), atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("tile_n", [3, 7, 13])
+def test_fwht_odd_tile_n_parity(tile_n):
+    """tile_n need not divide n or be a power of two: _fwht_jit pads
+    rows to the tile, and the result must still match the oracle
+    exactly (padding rows never leak into real rows)."""
+    from repro.kernels.fwht import fwht_pallas
+    rng = np.random.default_rng(tile_n)
+    x = jnp.asarray(rng.normal(size=(50, 64)), jnp.float32)
+    got = fwht_pallas(x, tile_n=tile_n)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.fwht_ref(x)), atol=1e-4)
+
+
+def test_fwht_1d_squeeze_parity():
+    """ops.fwht on a 1-D vector: batched internally, squeezed back."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=128), jnp.float32)
+    got = ops.fwht(x)
+    assert got.shape == (128,)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.fwht_ref(x[None]))[0],
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("d", [0, 3, 12, 100])
+def test_fwht_non_pow2_d_fails_fast(d):
+    """A non-power-of-two feature dim must raise BEFORE any tracing --
+    the butterfly would silently compute garbage on it."""
+    from repro.kernels.fwht import fwht_pallas
+    x = jnp.zeros((4, d), jnp.float32)
+    with pytest.raises(ValueError, match="power of two"):
+        fwht_pallas(x)
+    with pytest.raises(ValueError, match="power of two"):
+        ops.fwht(jnp.zeros((d,), jnp.float32)[None])
+
+
+def test_interpret_default_resolves_off_tpu():
+    """interpret=None resolves via the backend: the interpreter
+    everywhere except real TPU (this container is CPU-only)."""
+    from repro.kernels import default_interpret
+    assert default_interpret() == (jax.default_backend() != "tpu")
+
+
 @pytest.mark.parametrize("n,b", [(17, 1), (256, 1), (1000, 4), (513, 128)])
 def test_momentum_dot_sweep(n, b):
     rng = np.random.default_rng(n + b)
