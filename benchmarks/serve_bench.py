@@ -23,6 +23,16 @@ Also asserted here (hard, in both quick and full mode): ZERO
 recompiles after bucket warm-up -- the timed phase must be 100%
 compile-cache hits, checked via the service's trace accounting AND a
 global engine.trace_counts snapshot.
+
+Chaos mode (always on): a seed-keyed fault plan
+(repro.serve.faults.FaultPlan) poisons a fixed subset of the requests
+mid-run and delays others' submissions; the pass asserts (hard) that
+EXACTLY the poisoned requests fail (structured FAILED), that every
+survivor's objective is BIT-EQUAL to its fault-free run (quarantine
+invariance at bench scale), that zero recompiles happen under chaos,
+and that goodput (completed requests/sec under faults) stays above a
+floor fraction of the fault-free S=8 throughput.  Goodput lands in
+BENCH_serve.json so the degradation trajectory is tracked per run.
 """
 
 from __future__ import annotations
@@ -35,6 +45,8 @@ from benchmarks.common import emit, emit_count
 from repro.core import engine
 from repro.core.svm import SaddleSVC
 from repro.data import synthetic
+from repro.serve import faults as faults_mod
+from repro.serve.scheduler import RequestFailure
 from repro.serve.solver_service import FitRequest, SolverService
 
 R = 8            # requests per trial
@@ -72,6 +84,46 @@ def _svc_pass(reqs, num_slots: int, policy: str = "oldest"):
 def _lat_pcts(svc) -> tuple[float, float]:
     pcts = svc.latency_percentiles(50.0, 95.0)
     return pcts[50.0], pcts[95.0]
+
+
+CHAOS_SEED = 7
+GOODPUT_FLOOR = 0.3   # completed-rps under faults vs fault-free rps
+
+
+def _objectives(reqs) -> dict[int, float]:
+    """Fault-free reference objectives keyed by request seed."""
+    svc = SolverService(num_slots=8, chunk_steps=CHUNK)
+    rid2seed = {svc.submit(FitRequest(x=ds.x, y=ds.y, seed=seed,
+                                      num_iters=ITERS)): seed
+                for ds, seed in reqs}
+    return {rid2seed[rid]: res.objective
+            for rid, res in svc.run().items()}
+
+
+def _chaos_pass(reqs, plan: faults_mod.FaultPlan):
+    """Drive one service pass under the plan: delayed submissions feed
+    in as their step comes up, poison faults fire in-service via the
+    injector.  Returns (elapsed, svc, rid->seed, drained results)."""
+    svc = SolverService(num_slots=8, chunk_steps=CHUNK,
+                        fault_injector=faults_mod.FaultInjector(plan))
+    delays = plan.delays()
+    # the plan's rids are SUBMISSION-ORDER ids; sort by delay so the
+    # service assigns each rid at its planned step
+    order = sorted(((delays.get(i, 0), i, ds, seed)
+                    for i, (ds, seed) in enumerate(reqs)))
+    rid2seed: dict[int, int] = {}
+    t0 = time.perf_counter()
+    step_i, qi = 0, 0
+    while qi < len(order) or svc._sched.has_work():
+        while qi < len(order) and order[qi][0] <= step_i:
+            _, _, ds, seed = order[qi]
+            rid2seed[svc.submit(FitRequest(x=ds.x, y=ds.y, seed=seed,
+                                           num_iters=ITERS))] = seed
+            qi += 1
+        svc.step()
+        step_i += 1
+    dt = time.perf_counter() - t0
+    return dt, svc, rid2seed, svc.run()
 
 
 def run(quick: bool = True) -> None:
@@ -136,3 +188,48 @@ def run(quick: bool = True) -> None:
         if not quick:
             raise AssertionError(msg)
         print(f"# WARNING: {msg}")
+
+    # ---- chaos mode: goodput + quarantine invariance under faults ----
+    base_obj = _objectives(reqs)
+    plan = faults_mod.FaultPlan.generate(
+        CHAOS_SEED, list(range(R)), poison_frac=0.3, delay_frac=0.3,
+        max_chunk=3, max_delay=2)
+    assert plan.poisoned_rids(), "chaos plan degenerated: no poison"
+    _chaos_pass(reqs, plan)            # warm the poison helper compile
+    snap_chaos = dict(engine.trace_counts)
+    dt, svc, rid2seed, results = _chaos_pass(reqs, plan)
+
+    failed = {rid for rid, r in results.items()
+              if isinstance(r, RequestFailure)}
+    assert failed == plan.poisoned_rids(), \
+        f"failed {failed} != poisoned {plan.poisoned_rids()}"
+    for rid, res in results.items():
+        if rid in failed:
+            continue
+        # quarantine invariance, bench scale: survivors' objectives
+        # are BIT-EQUAL to their fault-free runs
+        assert res.objective == base_obj[rid2seed[rid]], \
+            (rid, res.objective, base_obj[rid2seed[rid]])
+    assert svc.stats["compiles"] == 0, svc.stats
+    delta = {k: v - snap_chaos.get(k, 0)
+             for k, v in engine.trace_counts.items()
+             if v != snap_chaos.get(k, 0)}
+    assert delta == {}, f"recompile under chaos: {delta}"
+
+    ok = R - len(failed)
+    goodput = ok / dt
+    ratio = goodput / (R / best[8])
+    emit("serve/chaos/goodput_rps", dt / max(ok, 1),
+         f"ok={ok}/{R};goodput_rps={goodput:.1f};"
+         f"poisoned={len(failed)};seed={CHAOS_SEED}")
+    emit_count("serve/chaos/failed_as_planned", len(failed),
+               "failed==poisoned;survivors_bit_equal")
+    emit_count("serve/chaos/recompiles", 0, "asserted_zero")
+    # goodput floor: completing the survivors under faults must retain
+    # at least GOODPUT_FLOOR of the fault-free S=8 request rate (the
+    # quarantined requests' burned chunks are the degradation budget)
+    assert ratio >= GOODPUT_FLOOR, \
+        (f"chaos goodput {goodput:.2f} rps is {ratio:.2f}x of the "
+         f"fault-free rate; floor {GOODPUT_FLOOR}x")
+    emit_count("serve/chaos/goodput_ratio", round(ratio, 3),
+               f"floor={GOODPUT_FLOOR};hard_assert")

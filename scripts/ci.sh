@@ -25,6 +25,11 @@ case "$tier" in
       ruff check src tests benchmarks scripts
     fi
     python -m pytest -q -m "not slow" "$@"
+    # fault-injection gate: the robustness suite (quarantine,
+    # deadline shedding, cancellation, retry, chaos plans, client
+    # drop) must be green on its own -- an explicit signal that the
+    # failure-handling paths were exercised, not just not-deselected.
+    python -m pytest -q -m "faults and not slow"
     # static analysis gate: BlockSpec/race/VMEM audit of every Pallas
     # kernel program (all serving rungs + both dry-run mesh client
     # shapes) and the rule-based compiled-HLO lint of the hot paths

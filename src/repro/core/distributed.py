@@ -318,6 +318,31 @@ def make_sharded_runner(mesh: jax.sharding.Mesh, axis=CLIENT_AXIS,
     return run
 
 
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _apply_client_drop(state: engine.PackedState, sign: jax.Array,
+                       client):
+    """Remove one client from the stacked vmap simulation IN SHAPE:
+    its sign row goes to 0 (its points leave every masked class
+    reduction, including the feasibility pmax rounds) and its dual
+    weights to NEG_INF / momentum to 0 (exp(NEG_INF) = 0, so the
+    client contributes nothing to any psum).  ``client`` is traced --
+    one compile serves every drop target -- and no operand shape
+    changes, so the chunk executable is NOT retraced.
+
+    Recovery rule (renormalized mass): the very next iteration's
+    normalizer round -- pmax + psum of the survivors' partial Z's --
+    rescales each class's total dual mass back to 1 over the k-1
+    survivors, exactly as if the protocol had been restarted on the
+    survivor shard set with the current iterates.  No host-side repair
+    step is needed; the MWU normalization IS the repair."""
+    drop = (jnp.arange(sign.shape[0]) == client)[:, None]
+    return state._replace(
+        log_lam=jnp.where(drop, NEG_INF, state.log_lam),
+        log_lam_prev=jnp.where(drop, NEG_INF, state.log_lam_prev),
+        u=jnp.where(drop, 0.0, state.u),
+    ), jnp.where(drop, 0.0, sign)
+
+
 class DistSolveResult(NamedTuple):
     state: ShardedState
     history: list
@@ -330,11 +355,23 @@ def solve_distributed(xp: np.ndarray, xm: np.ndarray, *, k: int = 20,
                       num_iters: int | None = None, block_size: int = 1,
                       seed: int = 0, record_every: int | None = None,
                       mesh: jax.sharding.Mesh | None = None,
-                      use_kernels: bool = False) -> DistSolveResult:
+                      use_kernels: bool = False,
+                      drop_client: tuple[int, int] | None = None
+                      ) -> DistSolveResult:
     """Run Saddle-DSVC with k clients (simulation unless a mesh is given).
 
     Data must already be preprocessed (Algorithm 3 runs WD per client with
-    the same shared D -- equivalent to transforming up front)."""
+    the same shared D -- equivalent to transforming up front).
+
+    ``drop_client=(c, at_iter)`` injects a client loss into the vmap
+    SIMULATION path: at outer iteration ``at_iter`` client ``c``
+    vanishes (see :func:`_apply_client_drop` -- shape-preserving, no
+    retrace) and the solve continues on the k-1 survivors with their
+    dual mass renormalized by the next MWU normalizer round.  The
+    survivor problem is the round-robin complement of shard ``c``
+    (original point index j*k + c belongs to the dropped client), and
+    the k-1 solve converges on IT -- the duality-gap tolerance is
+    pinned in ``tests/test_distributed.py``."""
     xp = np.asarray(xp, np.float32)
     xm = np.asarray(xm, np.float32)
     n1, d = xp.shape
@@ -355,11 +392,17 @@ def solve_distributed(xp: np.ndarray, xm: np.ndarray, *, k: int = 20,
     chunk = min(record_every or num_iters, num_iters)
     backend = "pallas" if use_kernels else "jnp"
 
+    if drop_client is not None and mesh is not None:
+        raise ValueError("drop_client injection is simulation-only "
+                         "(mesh=None)")
     if mesh is not None:
         runner = make_sharded_runner(mesh, backend=backend)
         run = lambda st, kk, ns: runner(st, kk, x_t, sign, ns,
                                         params=params, chunk_steps=chunk)
     else:
+        # late-bound ``sign`` so the drop injection below takes effect
+        # mid-solve without rebuilding the runner (shapes unchanged ->
+        # the chunk executable is shared across the drop boundary)
         run = lambda st, kk, ns: run_chunk_sim_packed(st, kk, x_t, sign,
                                                       ns, params=params,
                                                       chunk_steps=chunk,
@@ -372,8 +415,33 @@ def solve_distributed(xp: np.ndarray, xm: np.ndarray, *, k: int = 20,
     nu_rounds = float(projections.BISECT_ROUNDS_SOLVER) if nu > 0 else 0.0
     comm = CommModel(k=k, nu_rounds_per_iter=nu_rounds)
 
-    state, hist = engine.drive(state, jax.random.key(seed),
-                               num_iters, chunk, run)
+    if drop_client is None:
+        state, hist = engine.drive(state, jax.random.key(seed),
+                                   num_iters, chunk, run)
+    else:
+        # drive's loop with one extra chunk boundary at the drop
+        # iteration (same one-key-split-per-chunk discipline; the trip
+        # count is dynamic, so the split chunk costs no retrace)
+        drop_c, drop_at = drop_client
+        drop_at = max(0, min(int(drop_at), num_iters))
+        key = jax.random.key(seed)
+        hist, done, dropped = [], 0, False
+        while done < num_iters:
+            if not dropped and done >= drop_at:
+                state, sign = _apply_client_drop(
+                    state, sign, jnp.asarray(drop_c, jnp.int32))
+                dropped = True
+            bound = num_iters if dropped else min(drop_at, num_iters)
+            bound = bound if bound > done else num_iters
+            key, sub = jax.random.split(key)
+            ns = min(chunk, bound - done)
+            state, obj = run(state, sub, ns)
+            done += ns
+            # per-client objectives agree across LIVE clients; read a
+            # survivor's row (the dropped client's is stale)
+            ridx = ((drop_c + 1) % k) if dropped else 0
+            hist.append((done, float(np.asarray(
+                jax.device_get(obj)).reshape(-1)[ridx])))
     history = [(done, comm.total(done), obj) for done, obj in hist]
     return DistSolveResult(state=unpack_sharded_state(state, m1, m2),
                            history=history, comm=comm,

@@ -664,6 +664,14 @@ def saddle_gap_packed(w: jax.Array, x_t: jax.Array, sign: jax.Array,
     return inner_p - inner_m - 0.5 * jnp.sum(w * w)
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def deactivate_slot(state: SlotState, slot) -> SlotState:
+    """Freeze one lane (traced ``slot`` index: one compile total) --
+    the serving layer's cancellation path.  The lane's buffers are
+    left as-is; admission overwrites every field anyway."""
+    return state._replace(active=state.active.at[slot].set(False))
+
+
 def slot_trace_key(num_slots: int, n_pad: int, d: int, block_size: int,
                    chunk_steps: int, project: bool, check_gap: bool,
                    backend: str) -> tuple:
@@ -693,7 +701,19 @@ def chunk_body_slots(state: SlotState, x_t: jax.Array, sign: jax.Array,
     and -- when ``check_gap`` -- its duality gap (:func:
     `saddle_gap_packed`); a slot whose relative gap falls below its
     ``gap_tol`` or whose budget is exhausted goes inactive, freeing
-    its lane for mid-run admission.  Returns (new_state, obj (S,)).
+    its lane for mid-run admission.
+
+    Slot health: the same boundary computes a per-slot finite-health
+    flag -- ``w``/``u`` all finite, ``log_lam`` free of NaN/+inf (the
+    ``NEG_INF`` padding sentinel is finite and passes), objective
+    finite.  An unhealthy slot is deactivated ON DEVICE in the same
+    masked style as convergence, so a diverged/poisoned lane freezes
+    immediately instead of burning its remaining budget -- and because
+    lanes are vmapped independently, batch-mates' trajectories are
+    bit-for-bit unaffected.  The serving layer reads the flag from the
+    chunk's single host transfer and quarantines the lane.
+
+    Returns (new_state, obj (S,), healthy (S,) bool).
     """
     trace_counts[slot_trace_key(
         state.num_slots, x_t.shape[-1], d, block_size, chunk_steps,
@@ -725,13 +745,19 @@ def chunk_body_slots(state: SlotState, x_t: jax.Array, sign: jax.Array,
 
     obj = jax.vmap(objective_from_duals)(state.log_lam, x_t, sign)
 
-    done = state.t >= state.max_t
+    healthy = (jnp.isfinite(state.w).all(axis=-1)
+               & jnp.isfinite(state.u).all(axis=-1)
+               & ~jnp.isnan(state.log_lam).any(axis=-1)
+               & ~jnp.isposinf(state.log_lam).any(axis=-1)
+               & jnp.isfinite(obj))
+
+    done = (state.t >= state.max_t) | ~healthy
     if check_gap:
         gap = jax.vmap(saddle_gap_packed)(state.w, x_t, sign, sp.nu)
         converged = (sp.gap_tol > 0) & (
             obj - gap <= sp.gap_tol * jnp.maximum(obj, 1e-12))
         done = done | converged
-    return state._replace(active=state.active & ~done), obj
+    return state._replace(active=state.active & ~done), obj, healthy
 
 
 @functools.partial(jax.jit,
@@ -743,10 +769,11 @@ def run_chunk_slots(state: SlotState, x_t: jax.Array, sign: jax.Array,
                     d: int, block_size: int, project: bool,
                     check_gap: bool = False, backend: str = "jnp"):
     """Jitted slot-batched chunk: slot-state buffers donated (updated in
-    place), per-slot objectives returned as a device vector.  One
-    compile serves every chunk length up to ``chunk_steps`` and every
-    admission pattern -- the data buffers (``x_t``, ``sign``) and the
-    per-slot SlotParams are plain dynamic arguments."""
+    place), per-slot objectives AND finite-health flags returned as
+    device vectors (see :func:`chunk_body_slots`).  One compile serves
+    every chunk length up to ``chunk_steps`` and every admission
+    pattern -- the data buffers (``x_t``, ``sign``) and the per-slot
+    SlotParams are plain dynamic arguments."""
     return chunk_body_slots(state, x_t, sign, sp, num_steps,
                             chunk_steps=chunk_steps, d=d,
                             block_size=block_size, project=project,

@@ -290,7 +290,7 @@ def solve(xp: jax.Array, xm: jax.Array, *, eps: float = 1e-3,
     done = 0
     while done < num_iters:
         ns = min(chunk, num_iters - done)
-        sstate, obj = engine.run_chunk_slots(
+        sstate, obj, _healthy = engine.run_chunk_slots(
             sstate, x_t_b, sign_b, sp, ns, chunk_steps=chunk, d=d,
             block_size=block_size, project=nu > 0.0, check_gap=check_gap,
             backend=backend)

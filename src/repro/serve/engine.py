@@ -261,6 +261,14 @@ def admit_lane(state: LMSlotState, lane, prefill: ServeState,
     )
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def deactivate_lane(state: LMSlotState, lane) -> LMSlotState:
+    """Freeze one decode lane (traced ``lane`` index: one compile
+    total) -- the LM service's cancellation path.  The lane's cache is
+    left as-is; :func:`admit_lane` overwrites every field anyway."""
+    return state._replace(active=state.active.at[lane].set(False))
+
+
 def lm_slot_trace_key(name: str, num_slots: int, max_len: int,
                       chunk_steps: int, temperature: float) -> tuple:
     """The ``trace_counts`` key of one slot-decode chunk executable --
@@ -290,10 +298,21 @@ def decode_chunk_slots(params, state: LMSlotState, *, cfg,
     is implied by the cache shapes; it is threaded only to key
     ``trace_counts``.
 
-    Returns (new_state, toks (S, chunk_steps)); per lane only the
-    first ``t_after - t_before`` token columns are meaningful (a lane
-    freezes mid-chunk at exactly ``max_t``, and admission happens only
-    between chunks, so a lane's valid tokens are always a prefix).
+    Lane health: a per-lane finite-health flag is accumulated across
+    the chunk -- the entry logits AND every step's fresh logits must
+    be free of NaN/Inf (checking only the boundary would miss a NaN
+    that one sampling step consumes before a finite forward overwrites
+    it).  Unhealthy lanes are deactivated on device; lanes are vmapped
+    independently, so a poisoned lane's batch-mates decode bit-for-bit
+    as if it were healthy.  Free lanes hold zero logits and always
+    pass.  The LM service reads the flag from the chunk's single host
+    transfer and quarantines the lane.
+
+    Returns (new_state, toks (S, chunk_steps), healthy (S,) bool); per
+    lane only the first ``t_after - t_before`` token columns are
+    meaningful (a lane freezes mid-chunk at exactly ``max_t``, and
+    admission happens only between chunks, so a lane's valid tokens
+    are always a prefix).
     """
     trace_counts[lm_slot_trace_key(
         cfg.name, state.num_slots, max_len, chunk_steps,
@@ -304,7 +323,11 @@ def decode_chunk_slots(params, state: LMSlotState, *, cfg,
                                           cache=cache, pos_offset=pos)
         return logits[0, -1], new_cache
 
-    def body(st, _):
+    def lane_ok(logits):
+        return jnp.isfinite(logits.astype(jnp.float32)).all(axis=-1)
+
+    def body(carry, _):
+        st, ok = carry
         splits = jax.vmap(jax.random.split)(st.key)      # (S, 2)
         chain, sub = splits[:, 0], splits[:, 1]
         tok = jax.vmap(
@@ -315,11 +338,14 @@ def decode_chunk_slots(params, state: LMSlotState, *, cfg,
         st = LMSlotState(cache=cache, last_logits=last, pos=st.pos + 1,
                          t=jnp.where(do, st.t + 1, st.t),
                          max_t=st.max_t, key=chain, active=st.active)
-        return st, tok
+        return (st, ok & lane_ok(last)), tok
 
-    state, toks = jax.lax.scan(body, state, None, length=chunk_steps)
-    state = state._replace(active=state.active & (state.t < state.max_t))
-    return state, jnp.moveaxis(toks, 0, 1)               # (S, chunk)
+    (state, healthy), toks = jax.lax.scan(
+        body, (state, lane_ok(state.last_logits)), None,
+        length=chunk_steps)
+    state = state._replace(
+        active=state.active & (state.t < state.max_t) & healthy)
+    return state, jnp.moveaxis(toks, 0, 1), healthy      # (S, chunk)
 
 
 def generate(params, cfg, prompt_tokens, *, steps: int,

@@ -40,6 +40,26 @@ Compile discipline: one decode-chunk executable per service
 prefill executable per pow-2 prompt bucket -- after those are warm,
 every dispatch must be a compile-cache hit (asserted in
 ``benchmarks/lm_serve_bench.py``).
+
+Status contract & fault handling
+--------------------------------
+
+Same contract as the solver service: requests walk the scheduler's
+:class:`~repro.serve.scheduler.Status` lifecycle, readable via
+``status(rid)``.  ``submit`` fails fast (``ValueError`` naming the
+field) on non-1-D / non-integer prompts, out-of-vocab token ids,
+non-positive step counts and over-capacity shapes.  The decode chunk
+returns a per-lane finite-health flag
+(:func:`repro.serve.engine.decode_chunk_slots`, accumulated over the
+chunk's logits); an unhealthy lane is quarantined at the boundary --
+freed for re-admission, batch-mates token-for-token unaffected -- and
+retried within ``GenRequest.max_retries`` or failed with a structured
+:class:`~repro.serve.scheduler.RequestFailure`.  With a ``clock``,
+expired queued tickets are shed (DEADLINE_EXCEEDED) before each step;
+``cancel(rid)`` frees queued or running lanes between chunks.
+``result(rid)`` returns the ``GenResult`` or the ``RequestFailure``,
+raising :class:`~repro.serve.scheduler.ResultNotReady` (a ``KeyError``
+subclass) on known-but-unfinished rids.
 """
 
 from __future__ import annotations
@@ -52,7 +72,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve import engine
-from repro.serve.scheduler import Scheduler
+from repro.serve import faults as faults_mod
+from repro.serve.scheduler import (RequestFailure, ResultNotReady,
+                                   Scheduler, Status)
 
 # All lanes share one decode executable regardless of prompt bucket
 # (prefill is per-bucket; decode is depth-agnostic), so the LM side is
@@ -66,10 +88,11 @@ class GenRequest:
     """One generation request: a 1-D prompt token array plus the
     sampling configuration a solo ``generate`` call would take.
     (``temperature`` is service-level: it keys the decode executable.)
-    """
+    ``max_retries`` bounds re-admissions after a quarantine."""
     prompt: np.ndarray
     steps: int
     seed: int = 0
+    max_retries: int = 0
 
 
 class GenResult(NamedTuple):
@@ -115,7 +138,8 @@ class LMService:
     def __init__(self, params, cfg, *, num_slots: int = 4,
                  chunk_steps: int = 8, max_len: int = 128,
                  temperature: float = 0.0, policy: str = "oldest",
-                 cache_dtype=jnp.bfloat16):
+                 cache_dtype=jnp.bfloat16, clock=None,
+                 fault_injector=None):
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
@@ -123,23 +147,44 @@ class LMService:
         self.max_len = max_len
         self.temperature = temperature
         self.cache_dtype = cache_dtype
+        # opt-in wall-clock deadline shedding (see solver service)
+        self._clock = clock
+        self._injector = fault_injector     # faults.FaultInjector | None
         # full-attention caches only; other families -> fallback path
         self.slot_mode = engine._can_bucket(cfg)
         self._sched = Scheduler(
             num_slots=num_slots if self.slot_mode else 1, policy=policy)
         self._state: engine.LMSlotState | None = None
-        self._results: dict[int, GenResult] = {}
+        self._results: dict[int, GenResult | RequestFailure] = {}
+        self._tickets: dict[int, object] = {}   # rid -> live ticket
         self._next_id = 0
         self._chunks = 0         # decode chunks dispatched (lifetime)
 
     # ------------------------------------------------------------ intake
     def submit(self, prompt, steps: int, *, seed: int = 0,
-               priority: int = 0, deadline: float | None = None) -> int:
+               priority: int = 0, deadline: float | None = None,
+               max_retries: int = 0) -> int:
         """Enqueue one prompt; returns its ticket id.
-        ``priority``/``deadline`` feed the scheduler's urgency order."""
+        ``priority``/``deadline`` feed the scheduler's urgency order.
+
+        Fails fast (``ValueError`` naming the offending field) on
+        malformed prompts -- wrong rank/dtype, out-of-vocab token ids,
+        non-positive ``steps``, over-capacity shapes."""
         prompt = np.asarray(prompt)
         if prompt.ndim != 1:
             raise ValueError(f"prompt must be 1-D, got {prompt.shape}")
+        if not np.issubdtype(prompt.dtype, np.integer):
+            raise ValueError(
+                f"prompt must hold integer token ids, got dtype "
+                f"{prompt.dtype}")
+        if prompt.size and (prompt.min() < 0
+                            or prompt.max() >= self.cfg.vocab_size):
+            raise ValueError(
+                f"prompt token ids must lie in [0, "
+                f"{self.cfg.vocab_size}); got range "
+                f"[{prompt.min()}, {prompt.max()}]")
+        if steps < 1:
+            raise ValueError(f"steps must be >= 1, got {steps}")
         s_b = engine.prompt_bucket(len(prompt))
         if self.slot_mode and s_b + steps > self.max_len:
             raise ValueError(
@@ -147,10 +192,12 @@ class LMService:
                 f"service cache capacity max_len={self.max_len}")
         rid = self._next_id
         self._next_id += 1
-        self._sched.submit(_GROUP, rid,
-                           GenRequest(prompt=prompt, steps=steps,
-                                      seed=seed),
-                           priority=priority, deadline=deadline)
+        ticket = self._sched.submit(
+            _GROUP, rid,
+            GenRequest(prompt=prompt, steps=steps, seed=seed,
+                       max_retries=max_retries),
+            priority=priority, deadline=deadline)
+        self._tickets[rid] = ticket
         return rid
 
     # --------------------------------------------------------- admission
@@ -180,17 +227,41 @@ class LMService:
                 req.steps)
             ticket.note = _LaneLog(req, self._chunks)
 
+    # ----------------------------------------------------------- failure
+    def _record_failure(self, ticket, status: Status, reason: str) -> None:
+        """Terminal non-result: structured record claimable via
+        ``result(rid)``, live bookkeeping dropped."""
+        self._results[ticket.rid] = RequestFailure(
+            request_id=ticket.rid, status=status, reason=reason,
+            attempts=ticket.attempts)
+        self._tickets.pop(ticket.rid, None)
+
     # ----------------------------------------------------------- harvest
-    def _harvest(self, group, toks) -> list[GenResult]:
-        """Append each running lane's new tokens (its prefix of the
-        chunk's (S, chunk) token block), finish lanes whose budget is
-        exhausted, and free them."""
+    def _harvest(self, group, toks, healthy) -> list[GenResult]:
+        """QUARANTINE unhealthy lanes (retry or structured FAILED --
+        batch-mates are untouched), append each healthy running lane's
+        new tokens (its prefix of the chunk's (S, chunk) token block),
+        finish lanes whose budget is exhausted, and free them."""
         # ONE blocking transfer per chunk: lifecycle vectors + tokens
-        active, t, toks = map(np.asarray, jax.device_get(
-            (self._state.active, self._state.t, toks)))
+        active, t, toks, healthy = map(np.asarray, jax.device_get(
+            (self._state.active, self._state.t, toks, healthy)))
         out = []
         for lane, ticket in list(group.slots.items()):
             log = ticket.note
+            if not healthy[lane]:
+                # Engine already deactivated the lane on device; free
+                # it host-side.  Retries re-queue behind waiting
+                # tickets (fresh arrival = backoff ordering).
+                if ticket.attempts <= ticket.payload.max_retries:
+                    self._sched.resubmit(group, lane, ticket)
+                else:
+                    self._record_failure(
+                        ticket, Status.FAILED,
+                        f"non-finite logits detected after "
+                        f"{log.t_seen} tokens (quarantined; "
+                        f"attempts={ticket.attempts})")
+                    self._sched.release(group, lane, Status.FAILED)
+                continue
             gen = int(t[lane]) - log.t_seen
             if gen:
                 log.tokens.append(toks[lane, :gen])
@@ -205,15 +276,24 @@ class LMService:
                                 len(log.req.prompt)),
                             admitted_chunk=log.admitted_chunk)
             self._results[ticket.rid] = res
+            self._tickets.pop(ticket.rid, None)
             out.append(res)
             self._sched.release(group, lane)
         return out
 
     # -------------------------------------------------------------- run
     def step(self) -> list[GenResult]:
-        """One scheduling round: policy pick -> admit into freed lanes
-        -> one decode chunk -> harvest -> evict-if-drained.  Returns
+        """One scheduling round: shed expired deadlines -> policy pick
+        -> admit into freed lanes -> one decode chunk -> harvest
+        (quarantining unhealthy lanes) -> evict-if-drained.  Returns
         the requests that finished this round."""
+        if self._clock is not None:
+            for g, ticket in self._sched.shed_expired(self._clock()):
+                self._record_failure(
+                    ticket, Status.DEADLINE_EXCEEDED,
+                    f"deadline {ticket.deadline} passed before "
+                    f"admission")
+                self._sched.evict_idle(g)
         group = self._sched.next_group()
         if group is None:
             return []
@@ -222,16 +302,26 @@ class LMService:
         self._admit(group)
         if not group.slots:
             return []
+        # Deterministic fault injection (tests/bench only): poison a
+        # targeted lane's logits BEFORE its chunk.  A request's chunk
+        # index is how many decode chunks it has lived through.
+        if self._injector is not None:
+            for lane, ticket in group.slots.items():
+                if self._injector.poison_due(
+                        ticket.rid,
+                        self._chunks - ticket.note.admitted_chunk):
+                    self._state = faults_mod.poison_lane_logits(
+                        self._state, lane)
         dkey = engine.lm_slot_trace_key(
             self.cfg.name, self.num_slots, self.max_len,
             self.chunk_steps, self.temperature)
         with self._sched.stats.chunk(dkey, engine.trace_counts):
-            self._state, toks = engine.decode_chunk_slots(
+            self._state, toks, healthy = engine.decode_chunk_slots(
                 self.params, self._state, cfg=self.cfg,
                 chunk_steps=self.chunk_steps,
                 temperature=self.temperature, max_len=self.max_len)
         self._chunks += 1
-        out = self._harvest(group, toks)
+        out = self._harvest(group, toks, healthy)
         # Idle eviction: a drained service drops its lane table (the
         # stacked caches are the big device allocation); re-creating
         # it later costs one allocation, never a trace.
@@ -257,6 +347,7 @@ class LMService:
                             bucket=engine.prompt_bucket(len(req.prompt)),
                             admitted_chunk=self._chunks)
             self._results[ticket.rid] = res
+            self._tickets.pop(ticket.rid, None)
             out.append(res)
             self._sched.release(group, _lane)
         self._sched.evict_idle(group)
@@ -270,18 +361,71 @@ class LMService:
         out, self._results = self._results, {}
         return out
 
-    def result(self, rid: int) -> GenResult:
-        """Pop one completed result (KeyError if not finished yet)."""
-        return self._results.pop(rid)
+    # ------------------------------------------------------------ status
+    def status(self, rid: int) -> Status:
+        """The request's lifecycle state (see the module docstring).
+        KeyError on unknown/claimed rids."""
+        res = self._results.get(rid)
+        if res is not None:
+            return (res.status if isinstance(res, RequestFailure)
+                    else Status.DONE)
+        return self._tickets[rid].status
+
+    def result(self, rid: int) -> GenResult | RequestFailure:
+        """Pop one terminal outcome: the :class:`GenResult`, or the
+        structured :class:`RequestFailure`.  A KNOWN rid still in
+        flight raises :class:`ResultNotReady`; an unknown (or already
+        claimed) rid keeps the historical bare ``KeyError``."""
+        if rid in self._results:
+            return self._results.pop(rid)
+        if rid in self._tickets:
+            raise ResultNotReady(
+                f"request {rid} is {self._tickets[rid].status.value}")
+        raise KeyError(rid)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a live request: queued tickets are removed eagerly, a
+        running lane is deactivated and freed (between chunks -- the
+        service is host-driven).  Returns True if cancelled; False for
+        unknown/terminal rids."""
+        ticket = self._tickets.get(rid)
+        if ticket is None:
+            return False
+        hit = self._sched.cancel_queued(rid)
+        if hit is not None:
+            g, t = hit
+            self._record_failure(t, Status.CANCELLED,
+                                 "cancelled while queued")
+            if self._sched.evict_idle(g):
+                self._state = None
+            return True
+        for g in self._sched.groups:
+            for lane, t in list(g.slots.items()):
+                if t.rid == rid:
+                    if self._state is not None:
+                        self._state = engine.deactivate_lane(
+                            self._state, lane)
+                    self._record_failure(t, Status.CANCELLED,
+                                         "cancelled while running")
+                    self._sched.release(g, lane, Status.CANCELLED)
+                    if self._sched.evict_idle(g):
+                        self._state = None
+                    return True
+        return False
 
     def generate(self, prompt, steps: int, **kw) -> GenResult:
         """One-shot convenience: submit + drain (still exercises the
         full lane path, occupancy 1).  Other requests completed by the
-        drain stay claimable via ``result()``."""
+        drain stay claimable via ``result()``.  Raises ``RuntimeError``
+        if the request was quarantined past its retry budget."""
         rid = self.submit(prompt, steps, **kw)
         out = self.run()
         res = out.pop(rid)
         self._results.update(out)
+        if isinstance(res, RequestFailure):
+            raise RuntimeError(
+                f"generate request {rid} failed: {res.status.value} "
+                f"({res.reason})")
         return res
 
     # ------------------------------------------------------------- stats

@@ -69,16 +69,77 @@ trace-count deltas to THIS scheduler's calls only -- other services or
 solo solves sharing an executable key are never misattributed.  After
 warm-up every dispatch must be a cache hit; the serve benchmarks
 assert exactly that.
+
+Request lifecycle (status contract)
+-----------------------------------
+
+Every ticket carries a :class:`Status`::
+
+    PENDING -----------------> RUNNING ----------------> DONE
+       |  \\                      |  \\
+       |   `-> CANCELLED          |   `-> CANCELLED   (cancel(rid))
+       `-----> DEADLINE_EXCEEDED  `-----> FAILED      (quarantine)
+                (shed_expired)        \\
+                                       `-> PENDING    (resubmit, bounded
+                                                       retry budget)
+
+``submit`` creates PENDING tickets; ``admit`` marks them RUNNING;
+``release`` stamps the terminal status (DONE / FAILED / CANCELLED) and
+the queue-to-result latency.  ``shed_expired`` sweeps queued tickets
+whose deadline has passed (opt-in: services only shed when constructed
+with a ``clock``), ``cancel_queued`` removes a queued ticket eagerly,
+and ``resubmit`` re-enqueues a quarantined ticket with a FRESH arrival
+counter -- the retry queues behind everything already waiting, which
+is the backoff ordering.  Terminal statuses never transition again.
 """
 
 from __future__ import annotations
 
 import collections
 import contextlib
+import enum
 import heapq
 import itertools
 import time
-from typing import Any, Callable, Iterator
+from typing import Any, Callable, Iterator, NamedTuple
+
+
+class Status(enum.Enum):
+    """Request lifecycle states carried on the scheduler ticket.
+
+    Values are the wire strings services expose from ``status(rid)``.
+    """
+
+    PENDING = "PENDING"                      # queued, not yet in a lane
+    RUNNING = "RUNNING"                      # occupying a device lane
+    DONE = "DONE"                            # finished, result available
+    FAILED = "FAILED"                        # quarantined / rejected
+    CANCELLED = "CANCELLED"                  # cancel(rid) honored
+    DEADLINE_EXCEEDED = "DEADLINE_EXCEEDED"  # shed before admission
+
+    @property
+    def terminal(self) -> bool:
+        return self not in (Status.PENDING, Status.RUNNING)
+
+
+class RequestFailure(NamedTuple):
+    """Structured terminal record for a request that did NOT produce a
+    normal result: quarantined (FAILED), cancelled, or shed past its
+    deadline.  Services store these in their results map so callers get
+    a typed object from ``result(rid)`` instead of an exception."""
+
+    request_id: int
+    status: Status
+    reason: str
+    attempts: int = 0   # device admissions consumed (0 = never ran:
+                        # shed or cancelled while still queued)
+
+
+class ResultNotReady(KeyError):
+    """``result(rid)`` on a KNOWN request that has not reached a
+    terminal status yet.  Subclasses ``KeyError`` so pre-status-API
+    callers that caught the bare ``KeyError`` keep working; unknown
+    rids still raise the plain ``KeyError``."""
 
 
 class Ticket:
@@ -90,7 +151,7 @@ class Ticket:
     """
 
     __slots__ = ("rid", "payload", "priority", "deadline", "arrival",
-                 "submitted", "note")
+                 "submitted", "note", "status", "attempts")
 
     def __init__(self, rid: int, payload: Any, priority: int,
                  deadline: float | None, arrival: int, submitted: float):
@@ -101,6 +162,8 @@ class Ticket:
         self.arrival = arrival
         self.submitted = submitted
         self.note: Any = None
+        self.status: Status = Status.PENDING
+        self.attempts: int = 0   # admissions so far (retry accounting)
 
     @property
     def urgency(self) -> tuple:
@@ -134,6 +197,34 @@ class Group:
 
     def pop_most_urgent(self) -> Ticket:
         return heapq.heappop(self._heap)[1]
+
+    def remove_queued(self, rid: int) -> Ticket | None:
+        """Eagerly remove one queued ticket by rid (O(queue) rebuild);
+        None if the rid is not queued here."""
+        hit = None
+        kept = []
+        for entry in self._heap:
+            if hit is None and entry[1].rid == rid:
+                hit = entry[1]
+            else:
+                kept.append(entry)
+        if hit is not None:
+            self._heap = kept
+            heapq.heapify(self._heap)
+        return hit
+
+    def drain_expired(self, now: float) -> list[Ticket]:
+        """Remove every queued ticket whose deadline is <= ``now``
+        (deadline-less tickets never expire).  Returns the shed
+        tickets; the survivors keep their heap order."""
+        shed = [t for _, t in self._heap
+                if t.deadline is not None and t.deadline <= now]
+        if shed:
+            self._heap = [e for e in self._heap
+                          if not (e[1].deadline is not None
+                                  and e[1].deadline <= now)]
+            heapq.heapify(self._heap)
+        return shed
 
     @property
     def queued(self) -> int:
@@ -307,16 +398,63 @@ class Scheduler:
             if not group.queued:
                 break
             t = group.pop_most_urgent()
+            t.status = Status.RUNNING
+            t.attempts += 1
             group.slots[lane] = t
             out.append((lane, t))
         return out
 
-    def release(self, group: Group, lane: int) -> Ticket:
-        """Free a finished lane and record the ticket's queue-to-result
-        latency.  The lane is immediately admissible again."""
+    def release(self, group: Group, lane: int,
+                status: Status = Status.DONE) -> Ticket:
+        """Free a finished lane, stamp the terminal ``status`` and the
+        ticket's queue-to-result latency.  The lane is immediately
+        admissible again."""
         t = group.slots.pop(lane)
+        t.status = status
         self.latencies.append((t.rid, time.perf_counter() - t.submitted))
         return t
+
+    # ------------------------------------------------ faults/deadlines
+    def shed_expired(self, now: float) -> list[tuple[Group, Ticket]]:
+        """Sweep every group's queue for tickets whose deadline is
+        already past (``deadline <= now``) and shed them with status
+        DEADLINE_EXCEEDED -- a hopeless request never occupies a lane.
+        Only QUEUED tickets are shed; running ones finish their budget
+        (cancel them explicitly if needed).  Returns (group, ticket)
+        pairs so the workload can record structured failures."""
+        shed = []
+        for g in self.groups:
+            for t in g.drain_expired(now):
+                t.status = Status.DEADLINE_EXCEEDED
+                shed.append((g, t))
+        return shed
+
+    def cancel_queued(self, rid: int) -> tuple[Group, Ticket] | None:
+        """Remove a still-queued ticket from whichever group holds it,
+        stamping CANCELLED.  None if no group has it queued (it may be
+        running -- the workload cancels those between chunks via
+        :meth:`release`)."""
+        for g in self.groups:
+            t = g.remove_queued(rid)
+            if t is not None:
+                t.status = Status.CANCELLED
+                return g, t
+        return None
+
+    def resubmit(self, group: Group, lane: int, ticket: Ticket) -> Ticket:
+        """Retry path: free the quarantined lane WITHOUT a terminal
+        status and re-enqueue the same ticket with a fresh arrival
+        counter.  The fresh counter is the backoff ordering -- the
+        retry queues behind every ticket already waiting in its
+        urgency class, so one flaky tenant cannot hog a lane.  No
+        latency stamp (the request is still in flight)."""
+        assert group.slots.get(lane) is ticket
+        del group.slots[lane]
+        ticket.arrival = next(self._arrival)
+        ticket.status = Status.PENDING
+        ticket.note = None
+        group.enqueue(ticket)
+        return ticket
 
     def evict_idle(self, group: Group) -> bool:
         """Drop a drained group so workload device buffers held by its

@@ -77,6 +77,38 @@ chunk lengths and per-request parameter VALUES share it.  The
 scheduler tracks trace counts per key (``engine.trace_counts``); after
 a bucket is warm, every chunk must be a compile-cache hit
 (``SolverService.stats`` is asserted in ``benchmarks/serve_bench.py``).
+
+Status contract & fault handling
+--------------------------------
+
+Every request walks the scheduler's :class:`~repro.serve.scheduler.
+Status` lifecycle (PENDING -> RUNNING -> DONE / FAILED / CANCELLED /
+DEADLINE_EXCEEDED), readable any time via ``status(rid)``:
+
+  * INTAKE: ``submit`` fails fast with ``ValueError`` on non-finite
+    ``x``/``y``, shape mismatches, single-class ``y``, infeasible
+    ``nu`` and over-ladder shapes -- a malformed request never reaches
+    a device lane.
+  * QUARANTINE: the chunk executable returns a per-slot finite-health
+    flag (:func:`repro.core.engine.run_chunk_slots`); a slot whose
+    state diverged to NaN/Inf is quarantined at the chunk boundary --
+    lane freed for re-admission, batch-mates bit-for-bit unaffected
+    (lanes are vmapped independently) -- and either retried
+    (``FitRequest.max_retries``, re-enqueued BEHIND waiting tickets:
+    backoff ordering) or failed with a structured
+    :class:`~repro.serve.scheduler.RequestFailure`.
+  * DEADLINES: constructed with a ``clock``, the service sheds every
+    queued ticket whose deadline has passed at the top of each step
+    (DEADLINE_EXCEEDED) so hopeless requests never occupy a lane.
+    Without a clock, deadlines remain pure urgency ordering.
+  * CANCEL: ``cancel(rid)`` removes a queued ticket eagerly or frees a
+    running lane between chunks (the device slot is deactivated; the
+    executable shape never changes).
+
+``result(rid)`` returns the ``FitResult`` OR the ``RequestFailure``;
+on a known-but-unfinished rid it raises
+:class:`~repro.serve.scheduler.ResultNotReady` (a ``KeyError``
+subclass -- unknown rids keep the historical bare ``KeyError``).
 """
 
 from __future__ import annotations
@@ -93,7 +125,9 @@ from repro.core import engine
 from repro.core import preprocess as pp
 from repro.core import saddle
 from repro.core import svm as svm_mod
-from repro.serve.scheduler import Scheduler
+from repro.serve import faults as faults_mod
+from repro.serve.scheduler import (RequestFailure, ResultNotReady,
+                                   Scheduler, Status)
 
 
 @dataclass
@@ -101,7 +135,9 @@ class FitRequest:
     """One SVM fit: raw (x, y) plus the solver configuration a
     ``SaddleSVC``/``SaddleNuSVC`` would take.  ``nu=0`` is hard margin.
     ``gap_tol > 0`` enables the per-slot duality-gap early stop (the
-    request may then finish before ``num_iters``)."""
+    request may then finish before ``num_iters``).  ``max_retries``
+    bounds how many times a quarantined (non-finite) run is re-admitted
+    before the request fails for good."""
     x: np.ndarray
     y: np.ndarray
     eps: float = 1e-3
@@ -111,6 +147,7 @@ class FitRequest:
     block_size: int = 1
     seed: int = 0
     gap_tol: float = 0.0
+    max_retries: int = 0
 
 
 class FitResult(NamedTuple):
@@ -194,13 +231,24 @@ class SolverService:
     """
 
     def __init__(self, num_slots: int = 8, chunk_steps: int = 64,
-                 backend: str = "jnp", policy: str = "oldest"):
+                 backend: str = "jnp", policy: str = "oldest",
+                 clock=None, fault_injector=None,
+                 max_points: int = 1 << 20, max_dim: int = 1 << 14):
         self.num_slots = num_slots
         self.chunk_steps = chunk_steps
         self.backend = backend
+        # Deadline semantics are OPT-IN: without a clock, deadlines are
+        # pure urgency ordering (any orderable float, the historical
+        # contract); with ``clock`` (e.g. ``time.monotonic``) queued
+        # tickets whose deadline is past clock() are shed each step.
+        self._clock = clock
+        self._injector = fault_injector     # faults.FaultInjector | None
+        self.max_points = max_points        # over-ladder intake bounds:
+        self.max_dim = max_dim              # largest admissible bucket
         self._sched = Scheduler(num_slots=num_slots, policy=policy)
-        self._results: dict[int, FitResult] = {}
+        self._results: dict[int, FitResult | RequestFailure] = {}
         self._pre_cache: dict[int, Any] = {}
+        self._tickets: dict[int, Any] = {}  # rid -> live (non-terminal)
         self._next_id = 0
 
     @property
@@ -218,7 +266,33 @@ class SolverService:
         preprocessing is NOT the serving bottleneck the slot engine
         addresses, so it runs at intake.  ``priority``/``deadline``
         feed the scheduler's urgency order (see
-        :mod:`repro.serve.scheduler`)."""
+        :mod:`repro.serve.scheduler`).
+
+        Fails fast (``ValueError`` naming the offending field) on
+        malformed requests -- non-finite ``x``/``y``, shape
+        mismatches, single-class ``y``, infeasible ``nu``, over-ladder
+        shapes -- so one bad tenant is rejected at intake instead of
+        poisoning a device lane."""
+        x = np.asarray(req.x)
+        y = np.asarray(req.y)
+        if x.ndim != 2:
+            raise ValueError(
+                f"FitRequest.x must be 2-D (n, d); got shape {x.shape}")
+        if y.shape != (x.shape[0],):
+            raise ValueError(
+                f"FitRequest.y must be shape ({x.shape[0]},) to match "
+                f"x; got {y.shape}")
+        if not np.isfinite(x).all():
+            raise ValueError(
+                "FitRequest.x contains non-finite values (NaN/Inf)")
+        if not np.isfinite(y.astype(np.float64, copy=False)).all():
+            raise ValueError(
+                "FitRequest.y contains non-finite values (NaN/Inf)")
+        if x.shape[0] > self.max_points or x.shape[1] > self.max_dim:
+            raise ValueError(
+                f"FitRequest.x shape {x.shape} exceeds the service's "
+                f"bucket ladder (max_points={self.max_points}, "
+                f"max_dim={self.max_dim})")
         rid = self._next_id
         self._next_id += 1
         xp, xm = svm_mod.split_classes(req.x, req.y)   # raises on 1 class
@@ -235,11 +309,12 @@ class SolverService:
         project = req.nu > 0.0
         check_gap = req.gap_tol > 0.0
         batch_key = bucket + (req.block_size, project, check_gap)
-        self._sched.submit(
+        ticket = self._sched.submit(
             batch_key, rid, req, priority=priority, deadline=deadline,
             payload_factory=lambda: _Batch(bucket, self.num_slots,
                                            project, check_gap))
         self._pre_cache[rid] = pre
+        self._tickets[rid] = ticket
         return rid
 
     # --------------------------------------------------------- admission
@@ -279,18 +354,47 @@ class SolverService:
             ticket.note = _Slot(request_id=ticket.rid, req=req, pre=pre,
                                 xp_t=xp_t, xm_t=xm_t, history=[])
 
+    # ----------------------------------------------------------- failure
+    def _record_failure(self, ticket, status: Status, reason: str) -> None:
+        """Terminal non-result: structured record claimable via
+        ``result(rid)``, live bookkeeping dropped."""
+        self._results[ticket.rid] = RequestFailure(
+            request_id=ticket.rid, status=status, reason=reason,
+            attempts=ticket.attempts)
+        self._pre_cache.pop(ticket.rid, None)
+        self._tickets.pop(ticket.rid, None)
+
     # ----------------------------------------------------------- harvest
-    def _harvest(self, group, obj) -> list[FitResult]:
-        """Record per-slot history, extract every FINISHED slot through
-        the svm.py recovery path, and free its lane."""
+    def _harvest(self, group, obj, healthy) -> list[FitResult]:
+        """Record per-slot history, QUARANTINE unhealthy slots (retry
+        or structured FAILED -- batch-mates are untouched), extract
+        every FINISHED healthy slot through the svm.py recovery path,
+        and free its lane."""
         batch = group.payload
         # ONE blocking transfer per chunk for all (S,)-sized lifecycle
         # vectors; the big per-slot state only moves for finished slots
-        active, t, obj = map(np.asarray, jax.device_get(
-            (batch.state.active, batch.state.t, obj)))
+        active, t, obj, healthy = map(np.asarray, jax.device_get(
+            (batch.state.active, batch.state.t, obj, healthy)))
         out = []
         for lane, ticket in list(group.slots.items()):
             slot = ticket.note
+            if not healthy[lane]:
+                # Quarantine: the engine already deactivated the lane
+                # on device; free it host-side.  Within the retry
+                # budget the ticket re-queues BEHIND waiting tickets
+                # (fresh arrival = backoff ordering); past it, the
+                # request fails with a structured record.
+                if ticket.attempts <= ticket.payload.max_retries:
+                    self._pre_cache[ticket.rid] = slot.pre
+                    self._sched.resubmit(group, lane, ticket)
+                else:
+                    self._record_failure(
+                        ticket, Status.FAILED,
+                        f"non-finite solver state detected at "
+                        f"iteration {int(t[lane])} (quarantined; "
+                        f"attempts={ticket.attempts})")
+                    self._sched.release(group, lane, Status.FAILED)
+                continue
             slot.history.append((int(t[lane]), float(obj[lane])))
             if active[lane]:
                 continue
@@ -306,15 +410,26 @@ class SolverService:
                             iterations=int(t[lane]), bucket=batch.bucket,
                             history=slot.history)
             self._results[slot.request_id] = res
+            self._tickets.pop(slot.request_id, None)
             out.append(res)
             self._sched.release(group, lane)
         return out
 
     # -------------------------------------------------------------- run
     def step(self) -> list[FitResult]:
-        """One scheduling round: policy pick -> admit -> one chunk ->
-        harvest -> evict-if-drained.  Returns the requests that
+        """One scheduling round: shed expired deadlines -> policy pick
+        -> admit -> one chunk -> harvest (quarantining unhealthy
+        slots) -> evict-if-drained.  Returns the requests that
         finished this round."""
+        # Deadline shedding FIRST (opt-in via clock): expired queued
+        # tickets must neither drive the policy pick nor occupy a lane.
+        if self._clock is not None:
+            for g, ticket in self._sched.shed_expired(self._clock()):
+                self._record_failure(
+                    ticket, Status.DEADLINE_EXCEEDED,
+                    f"deadline {ticket.deadline} passed before "
+                    f"admission")
+                self._sched.evict_idle(g)
         group = self._sched.next_group()
         if group is None:
             return []
@@ -336,14 +451,25 @@ class SolverService:
         # a partial FIRST chunk no solo schedule ever takes.
         if batch.sp_dev is None:
             batch.sp_dev = jax.tree.map(jnp.asarray, batch.sp)
+        # Deterministic fault injection (tests/bench only): poison a
+        # targeted lane BEFORE its chunk; the jitted helper is keyed
+        # outside the chunk executables, so zero-recompile accounting
+        # is untouched.  A request's chunk index is the length of its
+        # recorded history.
+        if self._injector is not None:
+            for lane, ticket in group.slots.items():
+                if self._injector.poison_due(ticket.rid,
+                                             len(ticket.note.history)):
+                    batch.state = faults_mod.poison_slot_state(
+                        batch.state, lane)
         with self._sched.stats.chunk(key, engine.trace_counts):
-            batch.state, obj = engine.run_chunk_slots(
+            batch.state, obj, healthy = engine.run_chunk_slots(
                 batch.state, batch.x_t, batch.sign, batch.sp_dev,
                 self.chunk_steps,
                 chunk_steps=self.chunk_steps, d=d_pad,
                 block_size=block_size, project=project,
                 check_gap=check_gap, backend=self.backend)
-        out = self._harvest(group, obj)
+        out = self._harvest(group, obj, healthy)
         # Idle-batch eviction: a drained batch's device buffers (slot
         # state + the (S, d, n) operand) would otherwise leak device
         # memory across varied request shapes.  The COMPILED executable
@@ -361,18 +487,73 @@ class SolverService:
         out, self._results = self._results, {}
         return out
 
-    def result(self, rid: int) -> FitResult:
-        """Pop one completed result (KeyError if not finished yet)."""
-        return self._results.pop(rid)
+    # ------------------------------------------------------------ status
+    def status(self, rid: int) -> Status:
+        """The request's lifecycle state: DONE/FAILED/CANCELLED/
+        DEADLINE_EXCEEDED once terminal (until its result is claimed),
+        PENDING/RUNNING while live.  KeyError on unknown/claimed
+        rids."""
+        res = self._results.get(rid)
+        if res is not None:
+            return (res.status if isinstance(res, RequestFailure)
+                    else Status.DONE)
+        return self._tickets[rid].status
+
+    def result(self, rid: int) -> FitResult | RequestFailure:
+        """Pop one terminal outcome: the :class:`FitResult`, or the
+        structured :class:`RequestFailure` (quarantined / cancelled /
+        deadline-shed).  A KNOWN rid still in flight raises
+        :class:`ResultNotReady`; an unknown (or already claimed) rid
+        keeps the historical bare ``KeyError``."""
+        if rid in self._results:
+            return self._results.pop(rid)
+        if rid in self._tickets:
+            raise ResultNotReady(
+                f"request {rid} is {self._tickets[rid].status.value}")
+        raise KeyError(rid)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a live request: a QUEUED ticket is removed eagerly, a
+        RUNNING one has its device lane deactivated and freed (the
+        service is host-driven, so this is always between chunks).
+        Returns True if cancelled; False for unknown/terminal rids.
+        The outcome is a claimable CANCELLED :class:`RequestFailure`."""
+        ticket = self._tickets.get(rid)
+        if ticket is None:
+            return False
+        hit = self._sched.cancel_queued(rid)
+        if hit is not None:
+            g, t = hit
+            self._record_failure(t, Status.CANCELLED,
+                                 "cancelled while queued")
+            self._sched.evict_idle(g)
+            return True
+        for g in self._sched.groups:
+            for lane, t in list(g.slots.items()):
+                if t.rid == rid:
+                    g.payload.state = engine.deactivate_slot(
+                        g.payload.state, lane)
+                    self._record_failure(t, Status.CANCELLED,
+                                         "cancelled while running")
+                    self._sched.release(g, lane, Status.CANCELLED)
+                    self._sched.evict_idle(g)
+                    return True
+        return False
 
     def fit(self, x, y, **kw) -> FitResult:
         """One-shot convenience: submit + drain (still exercises the
         full slot path, S=1 occupancy).  Other requests completed by
-        the drain stay claimable via ``result()``."""
+        the drain stay claimable via ``result()``.  Raises
+        ``RuntimeError`` if the request was quarantined past its retry
+        budget."""
         rid = self.submit(FitRequest(x=x, y=y, **kw))
         out = self.run()
         res = out.pop(rid)
         self._results.update(out)      # keep co-drained results claimable
+        if isinstance(res, RequestFailure):
+            raise RuntimeError(
+                f"fit request {rid} failed: {res.status.value} "
+                f"({res.reason})")
         return res
 
     # ------------------------------------------------------------- stats

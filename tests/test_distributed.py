@@ -6,10 +6,12 @@ import sys
 import os
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import distributed as dist
+from repro.core import engine
 from repro.core import preprocess as pp
 from repro.core import saddle
 
@@ -73,6 +75,63 @@ def test_shard_points_roundtrip():
     np.testing.assert_allclose(recovered, x)
     rec_mask = np.transpose(mask, (1, 0)).reshape(-1)
     assert rec_mask[:23].all() and not rec_mask[23:].any()
+
+
+@pytest.mark.faults
+@pytest.mark.dist
+def test_drop_client_survivors_converge(problem):
+    """Losing one client mid-solve (drop_client injection): the dropped
+    shard's dual mass goes to EXACTLY zero, the survivors' mass is
+    renormalized to 1 by the next MWU normalizer round (the recovery
+    rule -- no host-side repair), and the k-1 solve converges ON THE
+    SURVIVOR PROBLEM (the round-robin complement of the dropped shard)
+    at the same rate as a from-scratch survivor-only serial solve."""
+    xp, xm = problem
+    n1, n2 = xp.shape[0], xm.shape[0]
+    k, c, iters = 5, 2, 4800
+    res = dist.solve_distributed(xp, xm, k=k, num_iters=iters,
+                                 record_every=800,
+                                 drop_client=(c, iters // 3))
+    eta, xi = dist.gather_duals(res.state, n1, n2, k)
+    # round-robin sharding: original index j*k + c lives on client c
+    drop_p = np.arange(n1) % k == c
+    drop_m = np.arange(n2) % k == c
+    assert eta[drop_p].sum() == 0.0 and xi[drop_m].sum() == 0.0
+    np.testing.assert_allclose(eta[~drop_p].sum(), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(xi[~drop_m].sum(), 1.0, rtol=1e-5)
+    # relative duality gap ON the survivor problem, from the survivor
+    # iterates (every live client holds the same w)
+    pts = pp.pack_points(xp[~drop_p], xm[~drop_m])
+
+    def rel_gap(w, lam):
+        log_lam = np.full(pts.sign.shape[0], engine.NEG_INF, np.float32)
+        log_lam[:lam.shape[0]] = np.log(np.maximum(lam, 1e-30))
+        obj = float(engine.objective_from_duals(
+            jnp.asarray(log_lam), jnp.asarray(pts.x_t),
+            jnp.asarray(pts.sign)))
+        gap = float(engine.saddle_gap_packed(
+            jnp.asarray(w), jnp.asarray(pts.x_t), jnp.asarray(pts.sign),
+            jnp.asarray(1.0)))
+        return (obj - gap) / max(obj, 1e-12)
+
+    r_drop = rel_gap(np.asarray(res.state.w[(c + 1) % k]),
+                     np.concatenate([eta[~drop_p], xi[~drop_m]]))
+    assert r_drop <= 0.25                    # 0.17 measured; see below
+    # no convergence penalty vs solving the survivor set from scratch
+    # with the same budget (0.17 vs 0.19 measured -- deterministic
+    # seeds; the 1.5x headroom covers cross-platform float wobble)
+    ser = saddle.solve(xp[~drop_p], xm[~drop_m], num_iters=iters)
+    lam_ser = np.concatenate([np.exp(np.asarray(ser.state.log_eta)),
+                              np.exp(np.asarray(ser.state.log_xi))])
+    r_ser = rel_gap(np.asarray(ser.state.w), lam_ser)
+    assert r_drop <= 1.5 * r_ser
+
+
+def test_drop_client_rejects_mesh_mode(problem):
+    xp, xm = problem
+    with pytest.raises(ValueError, match="simulation-only"):
+        dist.solve_distributed(xp, xm, k=2, num_iters=10,
+                               mesh="not-none", drop_client=(0, 5))
 
 
 def test_shard_map_runner_multidevice():

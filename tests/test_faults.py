@@ -1,0 +1,428 @@
+"""Fault-tolerant serving (repro.serve.faults + the services' status
+contract): deterministic fault plans, slot quarantine with bit-for-bit
+batch-mate invariance, bounded retry with backoff ordering, deadline
+shedding, cancellation, intake validation and the status API.
+
+The LM-side tests are additionally marked ``slow`` (model init
+dominates); everything else runs in the fast tier and is re-run by the
+``-m "faults and not slow"`` gate in scripts/ci.sh fast.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_stub import given, settings, st
+from repro.configs import get_config
+from repro.data import synthetic
+from repro.models import transformer as tf
+from repro.serve import engine as serve_engine
+from repro.serve.faults import Fault, FaultInjector, FaultPlan
+from repro.serve.lm_service import LMService
+from repro.serve.scheduler import (RequestFailure, ResultNotReady,
+                                   Scheduler, Status)
+from repro.serve.solver_service import FitRequest, SolverService
+
+pytestmark = [pytest.mark.faults, pytest.mark.serve]
+
+C = 40      # service chunk length (same as tests/test_solver_service.py)
+
+
+# ------------------------------------------------------------ fixtures
+@pytest.fixture(scope="module")
+def two_problems():
+    ds1 = synthetic.blobs(40, 50, 16, gap=1.2, spread=0.15, seed=0)
+    ds2 = synthetic.blobs(35, 45, 16, gap=0.8, spread=0.3, seed=2)
+    return ds1, ds2       # both land in the (128, 16) bucket
+
+
+def _nu(nu_frac, n1):
+    return nu_frac and 1.0 / (nu_frac * n1)
+
+
+def _run4(two_problems, nu_frac, injector=None, max_retries=0):
+    """Four same-bucket requests through an S=3 service (the fourth
+    waits for a freed lane).  Returns (rids, drained results, svc)."""
+    ds1, ds2 = two_problems
+    specs = [(ds1, 1, 40), (ds2, 9, 35), (ds1, 5, 40), (ds2, 13, 35)]
+    svc = SolverService(num_slots=3, chunk_steps=C,
+                        fault_injector=injector)
+    rids = [svc.submit(FitRequest(x=ds.x, y=ds.y, num_iters=4 * C,
+                                  seed=s, nu=_nu(nu_frac, n1),
+                                  max_retries=max_retries))
+            for ds, s, n1 in specs]
+    return rids, svc.run(), svc
+
+
+@pytest.fixture(scope="module")
+def clean4(two_problems):
+    """Fault-free reference runs of the _run4 workload, cached per
+    nu_frac -- the bit-for-bit baseline the quarantine tests compare
+    survivors against."""
+    cache = {}
+
+    def get(nu_frac):
+        if nu_frac not in cache:
+            rids, res, _ = _run4(two_problems, nu_frac)
+            cache[nu_frac] = (rids, res)
+        return cache[nu_frac]
+
+    return get
+
+
+def _assert_same_result(a, b):
+    """Bit-for-bit equality of two FitResults (not allclose: lanes are
+    vmapped independently, so a batch-mate's divergence must not move
+    a single bit of anyone else's trajectory)."""
+    np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
+    assert a.b == b.b
+    assert a.objective == b.objective
+    assert a.iterations == b.iterations
+
+
+# ----------------------------------------------------- fault plan/injector
+def test_fault_plan_deterministic():
+    """Same seed -> same plan, every time (replayable chaos); a
+    different seed gives a different plan."""
+    rids = list(range(24))
+    kw = dict(poison_frac=0.5, delay_frac=0.5, max_chunk=3, max_delay=3)
+    p1 = FaultPlan.generate(5, rids, **kw)
+    assert p1 == FaultPlan.generate(5, rids, **kw)
+    assert p1 != FaultPlan.generate(6, rids, **kw)
+    assert p1.poisoned_rids() <= set(rids)
+    for f in p1.faults:
+        if f.kind == "poison":
+            assert 0 <= f.at_chunk <= 3
+    for delay in p1.delays().values():
+        assert 1 <= delay <= 3
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("explode")
+
+
+def test_injector_poison_fires_exactly_once():
+    inj = FaultInjector(FaultPlan(
+        seed=0, faults=(Fault("poison", rid=7, at_chunk=1),)))
+    assert not inj.poison_due(7, 0)          # before its chunk
+    assert not inj.poison_due(8, 5)          # untargeted rid
+    assert inj.poison_due(7, 1)              # fires...
+    assert not inj.poison_due(7, 2)          # ...once (one-shot)
+    assert [f.rid for f in inj.fired] == [7]
+
+
+# ------------------------------------------------- scheduler status core
+def test_status_terminal_partition():
+    assert not Status.PENDING.terminal and not Status.RUNNING.terminal
+    for s in (Status.DONE, Status.FAILED, Status.CANCELLED,
+              Status.DEADLINE_EXCEEDED):
+        assert s.terminal
+
+
+def test_scheduler_resubmit_is_backoff_ordering():
+    """A resubmitted (quarantined) ticket re-queues BEHIND every ticket
+    already waiting in its urgency class."""
+    sched = Scheduler(num_slots=1)
+    t1 = sched.submit("g", 1)
+    t2 = sched.submit("g", 2)
+    g = sched.group("g")
+    [(lane, got)] = sched.admit(g)
+    assert got is t1 and t1.status is Status.RUNNING and t1.attempts == 1
+    sched.resubmit(g, lane, t1)
+    assert t1.status is Status.PENDING
+    [(lane, nxt)] = sched.admit(g)
+    assert nxt is t2                         # waiting ticket goes first
+    sched.release(g, lane)
+    [(lane, again)] = sched.admit(g)
+    assert again is t1 and t1.attempts == 2
+
+
+def test_scheduler_sheds_only_queued_tickets():
+    sched = Scheduler(num_slots=1)
+    t1 = sched.submit("g", 1, deadline=1.0)
+    g = sched.group("g")
+    sched.admit(g)                           # t1 now RUNNING
+    t2 = sched.submit("g", 2, deadline=1.0)
+    t3 = sched.submit("g", 3)                # deadline-less: never sheds
+    shed = sched.shed_expired(5.0)
+    assert [t for _, t in shed] == [t2]
+    assert t2.status is Status.DEADLINE_EXCEEDED
+    assert t1.status is Status.RUNNING and t3.status is Status.PENDING
+
+
+def test_scheduler_cancel_queued_skips_running():
+    sched = Scheduler(num_slots=1)
+    sched.submit("g", 1)
+    t2 = sched.submit("g", 2)
+    g = sched.group("g")
+    sched.admit(g)
+    assert sched.cancel_queued(1) is None    # running: not queue-cancellable
+    grp, t = sched.cancel_queued(2)
+    assert grp is g and t is t2 and t2.status is Status.CANCELLED
+    assert sched.cancel_queued(2) is None
+
+
+# -------------------------------------------------------------- intake
+def test_solver_intake_validation(two_problems):
+    """Malformed requests fail fast at submit with a ValueError naming
+    the offending field -- nothing is enqueued, no lane is poisoned."""
+    ds1, _ = two_problems
+    svc = SolverService(num_slots=2, chunk_steps=C)
+    bad_x = ds1.x.copy()
+    bad_x[3, 5] = np.nan
+    with pytest.raises(ValueError, match=r"FitRequest\.x.*non-finite"):
+        svc.submit(FitRequest(x=bad_x, y=ds1.y))
+    bad_y = ds1.y.astype(np.float64).copy()
+    bad_y[0] = np.inf
+    with pytest.raises(ValueError, match=r"FitRequest\.y.*non-finite"):
+        svc.submit(FitRequest(x=ds1.x, y=bad_y))
+    with pytest.raises(ValueError, match="must be 2-D"):
+        svc.submit(FitRequest(x=ds1.x[:, 0], y=ds1.y))
+    with pytest.raises(ValueError, match=r"FitRequest\.y must be shape"):
+        svc.submit(FitRequest(x=ds1.x, y=ds1.y[:-1]))
+    small = SolverService(num_slots=2, chunk_steps=C, max_points=64)
+    with pytest.raises(ValueError, match="bucket ladder"):
+        small.submit(FitRequest(x=ds1.x, y=ds1.y))      # 90 points > 64
+    narrow = SolverService(num_slots=2, chunk_steps=C, max_dim=8)
+    with pytest.raises(ValueError, match="bucket ladder"):
+        narrow.submit(FitRequest(x=ds1.x, y=ds1.y))     # d=16 > 8
+    assert not svc._sched.has_work()
+
+
+def test_lm_intake_validation():
+    """LM intake checks run before any device work (no params
+    needed)."""
+    cfg = get_config("gemma-7b").reduced()
+    svc = LMService(None, cfg, num_slots=2, chunk_steps=4, max_len=32)
+    with pytest.raises(ValueError, match="must be 1-D"):
+        svc.submit(np.zeros((2, 3), np.int32), steps=4)
+    with pytest.raises(ValueError, match="integer token ids"):
+        svc.submit(np.zeros(3, np.float32), steps=4)
+    with pytest.raises(ValueError, match="must lie in"):
+        svc.submit(np.array([0, cfg.vocab_size], np.int64), steps=4)
+    with pytest.raises(ValueError, match="steps must be >= 1"):
+        svc.submit(np.array([1, 2], np.int64), steps=0)
+    with pytest.raises(ValueError, match="max_len"):
+        svc.submit(np.arange(5) % cfg.vocab_size, steps=32)  # 8+32 > 32
+    assert not svc._sched.has_work()
+
+
+# ---------------------------------------------------------- status API
+def test_status_api_and_result_not_ready(two_problems):
+    ds1, _ = two_problems
+    svc = SolverService(num_slots=1, chunk_steps=C)
+    rid = svc.submit(FitRequest(x=ds1.x, y=ds1.y, num_iters=2 * C,
+                                seed=3))
+    assert svc.status(rid) is Status.PENDING
+    with pytest.raises(ResultNotReady):
+        svc.result(rid)
+    with pytest.raises(KeyError):            # ResultNotReady IS a KeyError
+        svc.result(rid)
+    assert svc.step() == []                  # chunk 1 of 2
+    assert svc.status(rid) is Status.RUNNING
+    (res,) = svc.step()
+    assert svc.status(rid) is Status.DONE
+    assert svc.result(rid) is res
+    with pytest.raises(KeyError):            # claimed: historical KeyError
+        svc.result(rid)
+    with pytest.raises(KeyError):
+        svc.status(rid)
+    with pytest.raises(KeyError):            # unknown rid: bare KeyError
+        svc.result(12345)
+
+
+# ---------------------------------------------------------- quarantine
+@pytest.mark.parametrize("nu_frac", [0.0, 0.85])
+def test_quarantine_bit_for_bit_invariance(two_problems, clean4, nu_frac):
+    """Poisoning one slot mid-run must not move a single bit of any
+    batch-mate's result (hard margin and nu-SVM), the victim gets a
+    structured FAILED record, and its freed lane serves the next
+    request (the fourth ran in it) with exact parity."""
+    clean_rids, clean_res = clean4(nu_frac)
+    victim = 1
+    inj = FaultInjector(FaultPlan(
+        seed=0, faults=(Fault("poison", rid=victim, at_chunk=1),)))
+    rids, res, _svc = _run4(two_problems, nu_frac, injector=inj)
+    f = res[rids[victim]]
+    assert isinstance(f, RequestFailure)
+    assert f.status is Status.FAILED and f.attempts == 1
+    assert "non-finite solver state" in f.reason
+    for i in (0, 2, 3):
+        _assert_same_result(res[rids[i]], clean_res[clean_rids[i]])
+    assert len(inj.fired) == 1
+
+
+@settings(max_examples=6, deadline=None)
+@given(victim=st.integers(min_value=0, max_value=3),
+       chunk=st.integers(min_value=0, max_value=3))
+def test_quarantine_invariance_property(two_problems, clean4, victim,
+                                        chunk):
+    """Property form: for ANY victim and ANY poison chunk, every
+    co-tenant's result is bit-for-bit the fault-free one."""
+    clean_rids, clean_res = clean4(0.0)
+    inj = FaultInjector(FaultPlan(
+        seed=0, faults=(Fault("poison", rid=victim, at_chunk=chunk),)))
+    rids, res, _svc = _run4(two_problems, 0.0, injector=inj)
+    for i, rid in enumerate(rids):
+        if i == victim:
+            assert isinstance(res[rid], RequestFailure)
+            assert res[rid].status is Status.FAILED
+        else:
+            _assert_same_result(res[rid], clean_res[clean_rids[i]])
+
+
+# --------------------------------------------------------------- retry
+def test_retry_recovers_and_queues_behind_waiters(two_problems):
+    """A transient fault (one-shot poison) within the retry budget:
+    the victim re-queues BEHIND the waiting bystander (backoff
+    ordering), then completes bit-for-bit clean."""
+    ds1, ds2 = two_problems
+    inj = FaultInjector(FaultPlan(
+        seed=0, faults=(Fault("poison", rid=0, at_chunk=0),)))
+    svc = SolverService(num_slots=1, chunk_steps=C, fault_injector=inj)
+    rv = svc.submit(FitRequest(x=ds1.x, y=ds1.y, num_iters=C, seed=1,
+                               max_retries=1))
+    rb = svc.submit(FitRequest(x=ds2.x, y=ds2.y, num_iters=C, seed=2))
+    assert svc.step() == []                  # victim poisoned+quarantined
+    assert svc.status(rv) is Status.PENDING  # resubmitted, not failed
+    assert [r.request_id for r in svc.step()] == [rb]   # bystander first
+    (got,) = svc.step()                      # then the clean retry
+    assert got.request_id == rv
+    assert len(inj.fired) == 1
+    clean = SolverService(num_slots=1, chunk_steps=C).fit(
+        ds1.x, ds1.y, num_iters=C, seed=1)
+    _assert_same_result(got, clean)
+
+
+def test_retry_budget_exhausted_fails_structured(two_problems):
+    ds1, _ = two_problems
+    inj = FaultInjector(FaultPlan(
+        seed=0, faults=(Fault("poison", rid=0, at_chunk=0),)))
+    svc = SolverService(num_slots=2, chunk_steps=C, fault_injector=inj)
+    rid = svc.submit(FitRequest(x=ds1.x, y=ds1.y, num_iters=2 * C,
+                                seed=1))                # max_retries=0
+    res = svc.run()
+    f = res[rid]
+    assert isinstance(f, RequestFailure) and f.status is Status.FAILED
+    assert f.attempts == 1 and "attempts=1" in f.reason
+    # the one-shot convenience path surfaces it as an exception
+    inj2 = FaultInjector(FaultPlan(
+        seed=0, faults=(Fault("poison", rid=0, at_chunk=0),)))
+    svc2 = SolverService(num_slots=2, chunk_steps=C, fault_injector=inj2)
+    with pytest.raises(RuntimeError, match="FAILED"):
+        svc2.fit(ds1.x, ds1.y, num_iters=C, seed=1)
+
+
+# ----------------------------------------------------------- deadlines
+def test_deadline_shedding_with_clock(two_problems):
+    """With an injected clock, queued tickets past their deadline are
+    shed (DEADLINE_EXCEEDED, attempts=0: never ran); RUNNING tickets
+    finish their budget; without a clock, deadlines stay pure urgency
+    ordering."""
+    ds1, ds2 = two_problems
+    now = [0.0]
+    svc = SolverService(num_slots=2, chunk_steps=C, clock=lambda: now[0])
+    r1 = svc.submit(FitRequest(x=ds1.x, y=ds1.y, num_iters=C, seed=1),
+                    deadline=5.0)
+    r2 = svc.submit(FitRequest(x=ds2.x, y=ds2.y, num_iters=C, seed=2))
+    now[0] = 10.0                            # r1 expires while queued
+    res = svc.run()
+    f = res[r1]
+    assert isinstance(f, RequestFailure)
+    assert f.status is Status.DEADLINE_EXCEEDED and f.attempts == 0
+    assert not isinstance(res[r2], RequestFailure)
+    # a ticket that got a lane before expiry is NOT shed mid-run
+    now[0] = 0.0
+    r3 = svc.submit(FitRequest(x=ds1.x, y=ds1.y, num_iters=2 * C,
+                               seed=3), deadline=5.0)
+    assert svc.step() == []                  # admitted while now < deadline
+    now[0] = 10.0
+    res = svc.run()
+    assert not isinstance(res[r3], RequestFailure)
+    # no clock -> the historical contract: deadlines only order
+    svc2 = SolverService(num_slots=1, chunk_steps=C)
+    r4 = svc2.submit(FitRequest(x=ds2.x, y=ds2.y, num_iters=C, seed=4),
+                     deadline=0.5)
+    assert not isinstance(svc2.run()[r4], RequestFailure)
+
+
+# -------------------------------------------------------------- cancel
+def test_cancel_queued_and_running(two_problems):
+    ds1, ds2 = two_problems
+    svc = SolverService(num_slots=1, chunk_steps=C)
+    r1 = svc.submit(FitRequest(x=ds1.x, y=ds1.y, num_iters=4 * C,
+                               seed=1))
+    r2 = svc.submit(FitRequest(x=ds2.x, y=ds2.y, num_iters=C, seed=2))
+    assert svc.step() == []                  # r1 RUNNING, r2 queued
+    assert svc.cancel(r2)
+    assert svc.status(r2) is Status.CANCELLED
+    f2 = svc.result(r2)
+    assert f2.attempts == 0 and "queued" in f2.reason
+    assert svc.cancel(r1)
+    f1 = svc.result(r1)
+    assert f1.status is Status.CANCELLED and f1.attempts == 1
+    assert "running" in f1.reason
+    assert not svc.cancel(r1)                # terminal: no-op
+    assert not svc.cancel(999)               # unknown: no-op
+    assert not svc._sched.has_work()
+    assert not svc._batches                  # device buffers evicted
+    # the service stays fully usable after cancellations
+    res = svc.fit(ds1.x, ds1.y, num_iters=C, seed=7)
+    assert res.iterations == C
+
+
+# ------------------------------------------------------------- LM side
+def _lm_model():
+    cfg = get_config("gemma-7b").reduced()
+    return cfg, tf.init_lm(jax.random.key(0), cfg)
+
+
+def _lm_solo(params, cfg, prompt, steps, seed, temperature):
+    return np.asarray(serve_engine.generate(
+        params, cfg, jnp.asarray(prompt, jnp.int32)[None], steps=steps,
+        temperature=temperature, seed=seed))[0]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_lm_quarantine_batchmates_token_for_token(temperature):
+    """Poisoned logits on one decode lane: the victim is quarantined
+    with a structured FAILED record, the batch-mate's tokens match
+    solo generate EXACTLY (greedy and temperature sampling), and the
+    freed lane serves the next prompt with exact parity."""
+    cfg, params = _lm_model()
+    rng = np.random.default_rng(0)
+    p1, p2, p3 = (rng.integers(0, cfg.vocab_size, s) for s in (6, 7, 5))
+    inj = FaultInjector(FaultPlan(
+        seed=0, faults=(Fault("poison", rid=0, at_chunk=1),)))
+    svc = LMService(params, cfg, num_slots=2, chunk_steps=4, max_len=48,
+                    temperature=temperature, fault_injector=inj)
+    rv = svc.submit(p1, steps=12, seed=3)
+    rb = svc.submit(p2, steps=12, seed=5)
+    res = svc.run()
+    f = res[rv]
+    assert isinstance(f, RequestFailure) and f.status is Status.FAILED
+    assert "non-finite logits" in f.reason and f.attempts == 1
+    np.testing.assert_array_equal(
+        res[rb].tokens, _lm_solo(params, cfg, p2, 12, 5, temperature))
+    r3 = svc.generate(p3, 8, seed=7)
+    np.testing.assert_array_equal(
+        r3.tokens, _lm_solo(params, cfg, p3, 8, 7, temperature))
+    assert len(inj.fired) == 1
+
+
+@pytest.mark.slow
+def test_lm_retry_recovers_transient_fault():
+    cfg, params = _lm_model()
+    rng = np.random.default_rng(1)
+    p = rng.integers(0, cfg.vocab_size, 6)
+    inj = FaultInjector(FaultPlan(
+        seed=0, faults=(Fault("poison", rid=0, at_chunk=0),)))
+    svc = LMService(params, cfg, num_slots=2, chunk_steps=4, max_len=48,
+                    fault_injector=inj)
+    rid = svc.submit(p, steps=8, seed=3, max_retries=1)
+    res = svc.run()
+    out = res[rid]
+    assert not isinstance(out, RequestFailure)
+    np.testing.assert_array_equal(
+        out.tokens, _lm_solo(params, cfg, p, 8, 3, 0.0))
+    assert len(inj.fired) == 1
