@@ -61,7 +61,15 @@ case "$tier" in
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
       python -m benchmarks.run --only lm_serve --json BENCH_lm_serve.json
     ;;
-  full) exec python -m pytest -q "$@" ;;
+  full)
+    python -m pytest -q "$@"
+    # perf gate (enforcing): full-size engine bench.  Unlike the fast
+    # tier's warn-only smoke, this FAILS if the packed single-sweep
+    # step or the fused device-resident driver miss their 1.5x floors
+    # (run.py exits 1 on a suite AssertionError).
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+      python -m benchmarks.run --only engine --full --json BENCH_engine.json
+    ;;
   *)    echo "usage: scripts/ci.sh [fast|full] [pytest args...]" >&2
         exit 2 ;;
 esac

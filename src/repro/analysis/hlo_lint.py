@@ -271,6 +271,26 @@ def _build_run_chunk_slots() -> str:
         check_gap=True).compile().as_text()
 
 
+def _build_run_solve_slots() -> str:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import engine
+
+    s, n_pad, d = 2, 256, 32
+    state = jax.eval_shape(lambda: engine.init_slot_state(s, n_pad, d))
+    sp = engine.SlotParams(*(jax.ShapeDtypeStruct((s,), jnp.float32)
+                             for _ in engine.SlotParams._fields))
+    return engine.run_solve_slots.lower(
+        state,
+        jax.ShapeDtypeStruct((s, d, n_pad), jnp.float32),
+        jax.ShapeDtypeStruct((s, n_pad), jnp.float32),
+        sp,
+        jax.ShapeDtypeStruct((), jnp.int32),
+        chunk_steps=4, num_chunks=3, d=d, block_size=1, project=True,
+        check_gap=True).compile().as_text()
+
+
 def _build_sharded_runner(k: int = 8) -> str:
     import jax
 
@@ -348,7 +368,8 @@ def default_targets() -> list[LintTarget]:
     PackedState has 5 leaves, SlotState 8, the sharded runner donates
     the 5-leaf replicated-state pytree; the decode chunk is a static
     ``scan`` (zero dynamic whiles), the solver chunks one dynamic
-    num_steps fori_loop; 24 = projections.BISECT_ROUNDS_SOLVER."""
+    num_steps fori_loop (the whole-solve driver adds the outer chunk
+    while, so 2); 24 = projections.BISECT_ROUNDS_SOLVER."""
     from repro.core import projections
 
     rounds = int(projections.BISECT_ROUNDS_SOLVER)
@@ -359,6 +380,15 @@ def default_targets() -> list[LintTarget]:
         LintTarget("engine.run_chunk_slots", _build_run_chunk_slots,
                    min_donated=8, comm="serial",
                    static_trips=(rounds,), max_dynamic_whiles=1),
+        # the device-resident whole-solve driver: the outer
+        # while_loop over chunks (dynamic: keyed on budget AND the
+        # slot-active flag, so gap stops end it early) plus the inner
+        # dynamic num_steps fori inside the chunk body = 2.  HOST-001
+        # on this target is the ISSUE 8 regression pin in HLO form:
+        # no transfer may survive inside either loop.
+        LintTarget("engine.run_solve_slots", _build_run_solve_slots,
+                   min_donated=8, comm="serial",
+                   static_trips=(rounds,), max_dynamic_whiles=2),
         LintTarget("distributed.sharded_run_fn[k=8]",
                    lambda: _build_sharded_runner(8),
                    min_donated=5,

@@ -780,6 +780,73 @@ def run_chunk_slots(state: SlotState, x_t: jax.Array, sign: jax.Array,
                             check_gap=check_gap, backend=backend)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("chunk_steps", "num_chunks", "d",
+                                    "block_size", "project", "check_gap",
+                                    "backend"),
+                   donate_argnums=(0,))
+def run_solve_slots(state: SlotState, x_t: jax.Array, sign: jax.Array,
+                    sp: SlotParams, num_iters, *, chunk_steps: int,
+                    num_chunks: int, d: int, block_size: int,
+                    project: bool, check_gap: bool = False,
+                    backend: str = "jnp"):
+    """DEVICE-RESIDENT multi-chunk solve driver: the whole chunked solve
+    in ONE executable, so a full solve is a single dispatch and a single
+    end-of-solve host transfer.
+
+    The host chunk loop this replaces re-dispatched
+    :func:`run_chunk_slots` once per chunk and -- whenever the duality
+    gap was enabled -- blocked on a ``device_get`` of the active mask at
+    every chunk boundary, serializing host<->device round-trips into the
+    hot path.  Here the outer loop is a ``lax.while_loop`` keyed on the
+    slot-active flag: it runs the SAME :func:`chunk_body_slots` the
+    per-chunk driver jits (bit-for-bit identical state trajectory, key
+    schedule and gap/health semantics), writes each boundary's per-slot
+    objective and iteration mark into preallocated device history
+    buffers, and exits as soon as every lane is inactive (budget
+    exhausted, gap converged, or health-frozen) or ``num_iters`` is
+    dispatched.  The gap-enabled path therefore needs ZERO per-chunk
+    host polls -- convergence is consumed by the loop condition on
+    device.
+
+    ``num_chunks`` (static) is the history capacity,
+    ``ceil(num_iters / chunk_steps)`` for a full-budget run; a gap stop
+    leaves the tail unwritten.  Returns ``(state, objs (num_chunks, S),
+    marks (num_chunks, S), chunks_done)`` -- callers slice the history
+    to ``chunks_done`` rows after ONE transfer.  ``marks`` records each
+    slot's iteration counter at the boundary, which equals the
+    cumulative dispatched iterations while the slot is live (and the
+    exact stop iteration on a gap stop).
+
+    The per-chunk :func:`run_chunk_slots` stays the serving entry point:
+    ``SolverService`` needs the host back between chunks to harvest
+    finished lanes and admit queued requests; a solo solve does not.
+    """
+    S = state.num_slots
+    objs = jnp.zeros((num_chunks, S), jnp.float32)
+    marks = jnp.zeros((num_chunks, S), jnp.int32)
+    num_iters = jnp.asarray(num_iters, jnp.int32)
+
+    def cond(carry):
+        st, done, i, _objs, _marks = carry
+        return (done < num_iters) & st.active.any()
+
+    def body(carry):
+        st, done, i, objs, marks = carry
+        ns = jnp.minimum(chunk_steps, num_iters - done)
+        st, obj, _healthy = chunk_body_slots(
+            st, x_t, sign, sp, ns, chunk_steps=chunk_steps, d=d,
+            block_size=block_size, project=project, check_gap=check_gap,
+            backend=backend)
+        return (st, done + ns, i + 1,
+                objs.at[i].set(obj), marks.at[i].set(st.t))
+
+    state, _done, i, objs, marks = jax.lax.while_loop(
+        cond, body, (state, jnp.asarray(0, jnp.int32),
+                     jnp.asarray(0, jnp.int32), objs, marks))
+    return state, objs, marks, i
+
+
 def drive(state, key, num_iters: int, chunk: int, run) -> tuple:
     """Shared host loop: split one key per chunk, dispatch fixed-shape
     chunks, accumulate device scalars, transfer history ONCE at the end.

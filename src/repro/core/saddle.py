@@ -42,6 +42,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import engine
 from repro.core import preprocess as pp
@@ -218,8 +219,14 @@ def unpack_state(pstate: engine.PackedState, n1: int,
 
 # Default duality-gap checking cadence when gap_tol > 0 and the caller
 # gave no record_every: frequent enough to realize most of the early
-# stop's savings, coarse enough that the per-chunk host sync and gap
-# sort stay negligible against the chunk's iterations.
+# stop's savings, coarse enough that the per-boundary gap evaluation
+# (one masked sort + objective, on device -- the device-resident driver
+# issues NO host sync at boundaries) stays negligible against the
+# chunk's iterations.  Re-derived by the predict-then-verify cadence
+# study in benchmarks/engine_bench.py (full mode): the boundary check
+# costs ~4-6 iterations, so the sqrt(2 * T * check / step) optimum for
+# typical stop horizons (T ~ 3k-30k) lands in the 128-512 band; 256
+# stays the default.
 GAP_CHECK_EVERY = 256
 
 
@@ -233,7 +240,8 @@ def solve(xp: jax.Array, xm: jax.Array, *, eps: float = 1e-3,
           block_size: int = 1, seed: int = 0,
           record_every: int | None = None,
           use_kernels: bool = False, n_pad: int | None = None,
-          d_pad: int | None = None, gap_tol: float = 0.0) -> SolveResult:
+          d_pad: int | None = None, gap_tol: float = 0.0,
+          driver: str = "device") -> SolveResult:
     """Run Saddle-SVC on (already preprocessed) data.
 
     Args:
@@ -252,20 +260,29 @@ def solve(xp: jax.Array, xm: jax.Array, *, eps: float = 1e-3,
         budget, reproducible schedule).  With gap_tol > 0 and no
         record_every, the chunk defaults to GAP_CHECK_EVERY iterations
         so the check actually fires before the budget is spent.
+      driver: "device" (default) runs the WHOLE chunked solve as one
+        executable (``engine.run_solve_slots``: a ``lax.while_loop``
+        over the chunk body keyed on the slot-active flag, history in a
+        preallocated device buffer, ONE host transfer at the end -- zero
+        per-chunk host syncs, gap-enabled or not).  "host" is the
+        per-chunk dispatch loop it replaced (one ``run_chunk_slots``
+        launch per chunk; with gap_tol > 0, a blocking active-mask
+        readback per boundary), retained for the transition as the
+        bit-for-bit parity oracle of the device driver.
 
     The hot loop is the SLOT-BATCHED engine driver at S=1 (one engine
     serves the serial solver and the multi-tenant service; the unpacked
-    ``engine.step`` remains the parity oracle).  All chunks share ONE
-    executable (the chunk's trip count is dynamic, so the final partial
-    chunk neither recompiles nor executes padded steps) and the
-    objective history stays on device until a single transfer at the
-    end.
+    ``engine.step`` remains the parity oracle).  Both drivers run the
+    same ``engine.chunk_body_slots`` chunk with the same key schedule,
+    so their histories and final states are bit-for-bit equal; the
+    chunk's trip count is dynamic, so the final partial chunk neither
+    recompiles nor executes padded steps.
     """
-    import numpy as np
-
     n1, d = xp.shape
     n2 = xm.shape[0]
     validate_nu(nu, n1, n2)
+    if driver not in ("device", "host"):
+        raise ValueError(f"driver={driver!r} must be 'device' or 'host'")
     if d_pad is not None:
         d = d_pad
     params = make_params(n1 + n2, d, eps, beta, nu=nu, block_size=block_size)
@@ -286,21 +303,32 @@ def solve(xp: jax.Array, xm: jax.Array, *, eps: float = 1e-3,
                       engine.slot_params_row(params, gap_tol))
     x_t_b, sign_b = pts.x_t[None], pts.sign[None]
 
-    objs, marks = [], []
-    done = 0
-    while done < num_iters:
-        ns = min(chunk, num_iters - done)
-        sstate, obj, _healthy = engine.run_chunk_slots(
-            sstate, x_t_b, sign_b, sp, ns, chunk_steps=chunk, d=d,
-            block_size=block_size, project=nu > 0.0, check_gap=check_gap,
-            backend=backend)
-        done += ns
-        objs.append(obj)
-        marks.append(done)
-        if check_gap and not bool(jax.device_get(sstate.active)[0]):
-            marks[-1] = int(jax.device_get(sstate.t)[0])  # gap stop
-            break
-    objs = [float(np.asarray(o)[0]) for o in jax.device_get(objs)]
+    if driver == "device":
+        sstate, objs_d, marks_d, nc_d = engine.run_solve_slots(
+            sstate, x_t_b, sign_b, sp, num_iters, chunk_steps=chunk,
+            num_chunks=-(-num_iters // chunk), d=d,
+            block_size=block_size, project=nu > 0.0,
+            check_gap=check_gap, backend=backend)
+        # the solve's ONE host transfer: history + chunk count together
+        objs_h, marks_h, nc = jax.device_get((objs_d, marks_d, nc_d))
+        objs = [float(o) for o in objs_h[:nc, 0]]
+        marks = [int(m) for m in marks_h[:nc, 0]]
+    else:
+        objs, marks = [], []
+        done = 0
+        while done < num_iters:
+            ns = min(chunk, num_iters - done)
+            sstate, obj, _healthy = engine.run_chunk_slots(
+                sstate, x_t_b, sign_b, sp, ns, chunk_steps=chunk, d=d,
+                block_size=block_size, project=nu > 0.0,
+                check_gap=check_gap, backend=backend)
+            done += ns
+            objs.append(obj)
+            marks.append(done)
+            if check_gap and not bool(jax.device_get(sstate.active)[0]):
+                marks[-1] = int(jax.device_get(sstate.t)[0])  # gap stop
+                break
+        objs = [float(np.asarray(o)[0]) for o in jax.device_get(objs)]
     pstate = engine.PackedState(
         w=sstate.w[0], log_lam=sstate.log_lam[0],
         log_lam_prev=sstate.log_lam_prev[0], u=sstate.u[0], t=sstate.t[0])

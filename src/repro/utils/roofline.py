@@ -47,6 +47,53 @@ class Roofline(NamedTuple):
         return model_flops_per_device / (t * PEAK_FLOPS) if t else 0.0
 
 
+def delta(a: Roofline, b: Roofline) -> Roofline:
+    """Roofline of the work ``a`` does beyond ``b`` (clamped at 0):
+    isolate the cost of an optional stage by differencing two compiled
+    variants -- e.g. the per-boundary duality-gap check as
+    analyze(chunk with check_gap) - analyze(chunk without)."""
+    flops = max(a.flops - b.flops, 0.0)
+    hbm = max(a.hbm_bytes - b.hbm_bytes, 0.0)
+    coll = max(a.collective_bytes - b.collective_bytes, 0.0)
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, collective_bytes=coll,
+        collectives=a.collectives,
+        compute_s=flops / PEAK_FLOPS, memory_s=hbm / HBM_BW,
+        collective_s=coll / (ICI_BW * ICI_LINKS))
+
+
+def pick_block_size(per_iter_s: dict[int, float]) -> int:
+    """Choose B from {B: per-iteration cost}: at a FIXED total
+    coordinate budget (iters x B held constant) the best block size
+    minimizes the per-COORDINATE time step(B) / B.  Works on predicted
+    (``Roofline.step_time_s``) and measured costs alike -- the
+    predict-then-verify knob study feeds it both and compares."""
+    if not per_iter_s:
+        raise ValueError("no block-size candidates")
+    return min(per_iter_s, key=lambda b: per_iter_s[b] / b)
+
+
+def gap_check_cadence(step_s: float, check_s: float, total_iters: int,
+                      ladder: tuple[int, ...] = (32, 64, 128, 256, 512,
+                                                 1024, 2048)) -> int:
+    """Choose the duality-gap check cadence c minimizing the expected
+    overhead of a run that converges after ~``total_iters`` steps:
+
+        cost(c) = (total_iters / c) * check_s   (boundary evaluations)
+                + (c / 2) * step_s              (mean post-convergence
+                                                 overshoot to the next
+                                                 boundary)
+
+    The unconstrained optimum is sqrt(2 * T * check / step); the ladder
+    keeps the choice pow-2 so gap solves share bucket executables.
+    Like :func:`pick_block_size` this is cost-source agnostic: feed it
+    roofline-predicted times to predict, measured times to verify."""
+    if step_s <= 0 or check_s < 0 or total_iters <= 0:
+        raise ValueError("costs must be positive")
+    return min(ladder, key=lambda c: total_iters / c * check_s
+               + 0.5 * c * step_s)
+
+
 def analyze(compiled, lowered_text: str | None = None) -> Roofline:
     cost = compiled.cost_analysis()
     if isinstance(cost, list):

@@ -1,0 +1,59 @@
+"""Roofline knob helpers: executable differencing (``delta``) and the
+cost-source-agnostic choosers behind the engine_bench predict-then-
+verify study (``pick_block_size``, ``gap_check_cadence``)."""
+
+import pytest
+
+from repro.utils import roofline
+
+
+def _rf(flops=0.0, hbm=0.0, coll=0.0):
+    return roofline.Roofline(
+        flops=flops, hbm_bytes=hbm, collective_bytes=coll,
+        collectives=None,
+        compute_s=flops / roofline.PEAK_FLOPS,
+        memory_s=hbm / roofline.HBM_BW,
+        collective_s=coll / (roofline.ICI_BW * roofline.ICI_LINKS))
+
+
+def test_delta_isolates_extra_work():
+    a = _rf(flops=2e12, hbm=3e9)
+    b = _rf(flops=1.5e12, hbm=1e9)
+    d = roofline.delta(a, b)
+    assert d.flops == pytest.approx(0.5e12)
+    assert d.hbm_bytes == pytest.approx(2e9)
+    assert d.step_time_s == pytest.approx(
+        max(0.5e12 / roofline.PEAK_FLOPS, 2e9 / roofline.HBM_BW))
+
+
+def test_delta_clamps_at_zero():
+    d = roofline.delta(_rf(flops=1.0), _rf(flops=5.0, hbm=1.0))
+    assert d.flops == 0.0 and d.hbm_bytes == 0.0
+    assert d.step_time_s == 0.0
+
+
+def test_pick_block_size_minimizes_per_coordinate_time():
+    # step cost sublinear in B -> largest block amortizes best
+    assert roofline.pick_block_size({1: 1.0, 32: 2.0, 128: 4.0}) == 128
+    # step cost superlinear in B -> bigger blocks do not pay
+    assert roofline.pick_block_size({32: 1.0, 64: 3.0}) == 32
+    with pytest.raises(ValueError):
+        roofline.pick_block_size({})
+
+
+def test_gap_check_cadence_tracks_sqrt_optimum():
+    # c* = sqrt(2 * T * check / step) = sqrt(2e6) ~ 1414 -> 1024 rung
+    assert roofline.gap_check_cadence(1e-6, 1e-4, 10000) == 1024
+    # free check: overshoot dominates, check as often as possible
+    assert roofline.gap_check_cadence(1e-3, 0.0, 10000) == 32
+    # ruinous check: evaluate as rarely as the ladder allows
+    assert roofline.gap_check_cadence(1e-9, 1.0, 10000) == 2048
+
+
+def test_gap_check_cadence_rejects_degenerate_costs():
+    with pytest.raises(ValueError):
+        roofline.gap_check_cadence(0.0, 1.0, 10)
+    with pytest.raises(ValueError):
+        roofline.gap_check_cadence(1e-6, -1.0, 10)
+    with pytest.raises(ValueError):
+        roofline.gap_check_cadence(1e-6, 1.0, 0)

@@ -1,10 +1,13 @@
 """Saddle-SVC: convergence to the C-Hull / RC-Hull optimum, parameter
-formulas (Algorithm 1 line 4), kernel-backend parity."""
+formulas (Algorithm 1 line 4), kernel-backend parity, and the
+device-resident driver's history/gap-stop invariants (host-loop
+parity, single host transfer, no warm retrace)."""
 
 import jax
 import numpy as np
 import pytest
 
+from repro.core import engine
 from repro.core import preprocess as pp
 from repro.core import saddle
 from repro.core.svm import split_classes
@@ -76,6 +79,104 @@ def test_gap_tol_stops_early_without_record_every(small_problem):
     stopped_at = res.history[-1][0]
     assert stopped_at < 50000
     assert stopped_at == int(res.state.t)
+
+
+def _hist(res):
+    return [(int(m), float(o)) for m, o in res.history]
+
+
+@pytest.mark.parametrize("driver", ["host", "device"])
+def test_history_marks_with_partial_final_chunk(small_problem, driver):
+    """(marks, objs) invariants under both drivers: marks strictly
+    increasing, the partial final chunk (103 % 25) recorded at its true
+    iteration, last mark == the state's iteration counter."""
+    xp, xm = small_problem
+    res = saddle.solve(xp, xm, num_iters=103, record_every=25,
+                       driver=driver)
+    marks = [m for m, _ in res.history]
+    assert marks == [25, 50, 75, 100, 103]
+    assert all(np.isfinite(o) for _, o in res.history)
+    assert marks[-1] == int(res.state.t)
+
+
+@pytest.mark.parametrize("driver", ["host", "device"])
+def test_gap_stop_last_mark_is_stop_iteration(small_problem, driver):
+    xp, xm = small_problem
+    res = saddle.solve(xp, xm, num_iters=50000, record_every=256,
+                       gap_tol=0.5, driver=driver)
+    marks = [m for m, _ in res.history]
+    assert all(b > a for a, b in zip(marks, marks[1:]))
+    assert marks[-1] < 50000
+    assert marks[-1] == int(res.state.t)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(num_iters=103, record_every=25),        # partial final chunk
+    dict(num_iters=60, record_every=100),        # single (clamped) chunk
+    dict(num_iters=50000, record_every=256, gap_tol=0.5),   # gap stop
+    dict(num_iters=160, record_every=32, block_size=4,
+         nu=1.0 / (0.8 * 30)),                   # nu>0 block mode
+])
+def test_device_driver_bit_equal_to_host(small_problem, kw):
+    """The transition contract: the device-resident while_loop driver
+    replays the host chunk loop bit for bit -- same history, same
+    final state -- because both drive the same chunk body with the
+    same (state, num_steps) sequence and key schedule."""
+    xp, xm = small_problem
+    a = saddle.solve(xp, xm, driver="host", **kw)
+    b = saddle.solve(xp, xm, driver="device", **kw)
+    assert _hist(a) == _hist(b)
+    for la, lb in zip(a.state, b.state):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+@pytest.mark.parametrize("driver", ["host", "device"])
+def test_gap_stop_prefix_bit_equal_to_gap_disabled(small_problem, driver):
+    """Turning the gap check ON changes when a run stops, never what it
+    computes: the stopped history must be a bit-equal prefix of the
+    gap-disabled trajectory at the same record cadence."""
+    xp, xm = small_problem
+    stopped = saddle.solve(xp, xm, num_iters=50000, record_every=256,
+                           gap_tol=0.5, driver=driver)
+    stop_at = stopped.history[-1][0]
+    assert stop_at % 256 == 0        # the gap only fires at boundaries
+    ref = saddle.solve(xp, xm, num_iters=stop_at, record_every=256,
+                       driver=driver)
+    assert _hist(stopped) == _hist(ref)
+
+
+def test_device_solve_single_host_transfer(small_problem, monkeypatch):
+    """Regression pin for the ISSUE 8 driver: a warm device-driver
+    solve performs exactly ONE device_get -- the end-of-solve history
+    harvest -- with the gap check off AND on (the host loop needed one
+    blocking poll per boundary when the gap was enabled)."""
+    xp, xm = small_problem
+    kw = dict(num_iters=103, record_every=25)
+    saddle.solve(xp, xm, **kw)                       # warm, gap off
+    saddle.solve(xp, xm, gap_tol=1e-12, **kw)        # warm, gap on
+    real = jax.device_get
+    calls = []
+
+    def counting(*a, **k):
+        calls.append(a)
+        return real(*a, **k)
+
+    monkeypatch.setattr(jax, "device_get", counting)
+    saddle.solve(xp, xm, **kw)
+    assert len(calls) == 1
+    calls.clear()
+    saddle.solve(xp, xm, gap_tol=1e-12, **kw)
+    assert len(calls) == 1
+
+
+def test_device_solve_no_retrace_when_warm(small_problem):
+    """Second warm solve must not retrace any engine executable."""
+    xp, xm = small_problem
+    kw = dict(num_iters=103, record_every=25)
+    saddle.solve(xp, xm, **kw)
+    before = dict(engine.trace_counts)
+    saddle.solve(xp, xm, **kw)
+    assert dict(engine.trace_counts) == before
 
 
 def test_kernel_backend_parity(small_problem):
