@@ -10,6 +10,13 @@ forced to max k), so the O(k) scalar bound is a tracked metric, not a
 docstring claim.  Every record emits measured count/bytes, the model
 prediction, and the match bit; any mismatch fails the suite.
 
+The same subprocess also pins the SERVING slot chunk
+(``engine.run_chunk_slots_sharded``) for k in {2, 8}: the lanes
+placement must compile with ZERO collectives anywhere
+(``comm/serve_lanes_*``), the point-sharded placement must equal
+``ServeCommModel`` on both the per-iteration and per-chunk multisets
+(``comm/serve_points_*``).
+
 Theorem 6 (full mode only -- it solves QPs and 30k-iteration saddle
 runs): iterations-to-tolerance scale like sqrt(d / (eps * beta)) in d.
 
@@ -31,6 +38,12 @@ AUDIT_KS = (2, 8, 32)
 AUDIT_N1, AUDIT_N2, AUDIT_D, AUDIT_B = 320, 384, 64, 8
 NU_FRAC = 0.8
 
+# the serving slot chunk (engine.run_chunk_slots_sharded): audit both
+# placements at k in {2, 8} -- lanes must compile collective-FREE,
+# point-sharded must match ServeCommModel exactly (iter AND chunk)
+SERVE_AUDIT_KS = (2, 8)
+SERVE_SLOTS = 2
+
 
 def _audit_specs() -> list[dict]:
     specs = []
@@ -47,14 +60,43 @@ def _audit_specs() -> list[dict]:
     return specs
 
 
+def _serve_audit_specs() -> list[dict]:
+    specs = []
+    for k in SERVE_AUDIT_KS:
+        for nu_frac in (0.0, NU_FRAC):
+            nu = 1.0 / (nu_frac * AUDIT_N1) if nu_frac else 0.0
+            for sharded in (False, True):
+                specs.append({
+                    "kind": "serve", "k": k,
+                    "num_slots": SERVE_SLOTS * k if not sharded
+                    else SERVE_SLOTS,
+                    "n1": AUDIT_N1, "n2": AUDIT_N2, "d": AUDIT_D,
+                    "nu": nu, "block_size": 1 if not sharded
+                    else AUDIT_B,
+                    "sharded": sharded, "chunk_steps": 8})
+    return specs
+
+
 def run_comm(quick: bool = True) -> None:
     """Measured-vs-CommModel collective counts (Theorem 8)."""
     from repro.utils import comm_audit
 
     del quick  # same matrix in both modes: one subprocess, tiny programs
-    records = comm_audit.collect_audits(_audit_specs())
+    records = comm_audit.collect_audits(
+        _audit_specs() + _serve_audit_specs())
     mismatches = []
     for rec in records:
+        if rec.get("kind") == "serve":
+            tag = (f"comm/serve_{'points' if rec['sharded'] else 'lanes'}"
+                   f"_k{rec['k']}_{'nu' if rec['nu'] else 'hm'}")
+            emit_count(tag, rec["per_iteration_count"],
+                       f"match={rec['match']};"
+                       f"bytes_per_iter={rec['per_iteration_bytes']};"
+                       f"per_chunk={rec['measured_per_chunk']};"
+                       f"S={rec['num_slots']};B={rec['block_size']}")
+            if not rec["match"]:
+                mismatches.append(tag)
+            continue
         tag = (f"comm/measured_k{rec['k']}_"
                f"{'nu' if rec['nu'] else 'hm'}")
         emit_count(tag, rec["per_iteration_count"],

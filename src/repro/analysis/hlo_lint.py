@@ -305,6 +305,24 @@ def _build_sharded_runner(k: int = 8) -> str:
         *args).compile().as_text()
 
 
+def _build_serve_chunk(k: int, *, sharded: bool) -> str:
+    """The mesh-sharded serving slot chunk
+    (``engine.run_chunk_slots_sharded`` via the shared comm_audit
+    lowering recipe).  Lanes placement: 8 slots spread 1-per-device;
+    point-sharded placement: 2 large-n lanes spanning all k devices."""
+    from repro.core import preprocess as pp
+    from repro.utils import comm_audit
+
+    if sharded:
+        n_pad = k * pp.bucket_length(-(-(300 + 280) // k))
+        return comm_audit.lower_serve_chunk(
+            k, num_slots=2, n_pad=n_pad, d=32, nu=1.0,
+            block_size=1, chunk_steps=4, sharded=True)
+    return comm_audit.lower_serve_chunk(
+        k, num_slots=8, n_pad=pp.bucket_length(100 + 90), d=32, nu=1.0,
+        block_size=1, chunk_steps=4, sharded=False)
+
+
 LM_ARCH = "gemma-7b"      # smallest bucketable (all-attn) config
 LM_SLOTS = 2
 LM_CHUNK = 4
@@ -363,6 +381,15 @@ def _comm_model(k: int, nu: float):
     return CommModel(k=k, nu_rounds_per_iter=rounds)
 
 
+def _serve_comm_model(k: int, num_slots: int, nu: float):
+    from repro.core import projections
+    from repro.core.distributed import ServeCommModel
+
+    rounds = float(projections.BISECT_ROUNDS_SOLVER) if nu > 0 else 0.0
+    return ServeCommModel(k=k, num_slots=num_slots,
+                          nu_rounds_per_iter=rounds)
+
+
 def default_targets() -> list[LintTarget]:
     """The hot paths linted on every gate run.  Expected counts:
     PackedState has 5 leaves, SlotState 8, the sharded runner donates
@@ -393,6 +420,21 @@ def default_targets() -> list[LintTarget]:
                    lambda: _build_sharded_runner(8),
                    min_donated=5,
                    comm=(_comm_model(8, 1.0), 128),
+                   static_trips=(rounds,), max_dynamic_whiles=1),
+        # the two serving placements of the mesh slot chunk.  Lanes:
+        # every device owns whole slots, so the module must compile
+        # collective-FREE end to end ("serial" comm even though it runs
+        # under shard_map).  Points: 2 big lanes span all 8 devices and
+        # the step loop must stay inside the vmap-batched Theorem-8
+        # budget (ServeCommModel).
+        LintTarget("engine.run_chunk_slots_sharded[lanes,k=8]",
+                   lambda: _build_serve_chunk(8, sharded=False),
+                   min_donated=8, comm="serial",
+                   static_trips=(rounds,), max_dynamic_whiles=1),
+        LintTarget("engine.run_chunk_slots_sharded[points,k=8]",
+                   lambda: _build_serve_chunk(8, sharded=True),
+                   min_donated=8,
+                   comm=(_serve_comm_model(8, 2, 1.0), 1),
                    static_trips=(rounds,), max_dynamic_whiles=1),
         LintTarget(f"serve._prefill_bucketed[{LM_ARCH}]",
                    _build_prefill_bucketed,

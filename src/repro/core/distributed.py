@@ -144,6 +144,70 @@ class CommModel(NamedTuple):
                    in self.collective_multiset(block_size).items())
 
 
+class ServeCommModel(NamedTuple):
+    """Collective budget of the POINT-SHARDED serving chunk
+    (``engine.run_chunk_slots_sharded`` with non-empty ``point_axes``).
+
+    The sharded slot driver vmaps ``engine._step_packed_core`` over the
+    S lanes of a slot group with the SAME ``axis_name`` rounds as the
+    solo distributed step, and vmap batches each round's collective into
+    ONE launch whose payload scales by S.  The per-iteration multiset is
+    therefore :class:`CommModel`'s with every payload multiplied by
+    ``num_slots`` -- the LAUNCH count stays the Theorem-8 constant (3
+    for HM-Saddle, 5 + BISECT_ROUNDS for nu-Saddle), so serving S fits
+    across k shards costs exactly one fit's collective rounds.
+
+    ``num_slots`` is the PER-DEVICE slot extent the chunk body is traced
+    at (the group's full S for the pure point-sharded placement; S over
+    the slot-axes extent when slot- and point-sharding compose).
+    Unsharded slot groups need no model: their placement is
+    collective-FREE and the audit pins the empty multiset.
+    """
+    k: int
+    num_slots: int
+    nu_rounds_per_iter: float   # 0 for HM-Saddle; else BISECT_ROUNDS
+
+    def collective_multiset(self, block_size: int = 1) -> dict:
+        """Per-iteration launches inside the chunk's step loop, keyed
+        (op, reduce_kind, result_elements).  Identical launch structure
+        to :meth:`CommModel.collective_multiset`; payloads are the
+        vmap-batched (S, .) shapes.  Keys whose payloads collide (e.g.
+        momentum S*B vs cap-set 4S when B == 4) merge, exactly as the
+        measured HLO multiset merges them."""
+        s = self.num_slots
+        ms: dict = {}
+
+        def bump(kind, elems, cnt=1):
+            key = ("all-reduce", kind, elems)
+            ms[key] = ms.get(key, 0) + cnt
+
+        bump("add", s * block_size)      # momentum delta   (S, B)
+        bump("max", 2 * s)               # normalizer pmax  (S, 2)
+        bump("add", 2 * s)               # normalizer psum  (S, 2)
+        if self.nu_rounds_per_iter:
+            bump("max", 2 * s)           # feasibility pmax (S, 2)
+            bump("add", 2 * s, int(self.nu_rounds_per_iter))  # bisection
+            bump("add", 4 * s)           # cap-set stats    (S, 4)
+        return ms
+
+    def per_chunk_multiset(self, d: int) -> dict:
+        """Launches at the chunk boundary, OUTSIDE the step loop: the
+        per-slot objective psum ((S, d) -- each slot's shard holds only
+        its points' dual-weighted sum) and the health agreement psum
+        ((S,) -- one shard's overflow must deactivate the slot on every
+        shard).  Constant per chunk, amortized over chunk_steps."""
+        s = self.num_slots
+        return {("all-reduce", "add", s * d): 1,
+                ("all-reduce", "add", s): 1}
+
+    def collectives_per_iteration(self, block_size: int = 1) -> int:
+        return sum(self.collective_multiset(block_size).values())
+
+    def payload_elements_per_iteration(self, block_size: int = 1) -> int:
+        return sum(elems * cnt for (_, _, elems), cnt
+                   in self.collective_multiset(block_size).items())
+
+
 def dsvc_step(state: ShardedState, key: jax.Array, xp: jax.Array,
               xm: jax.Array, p: SaddleParams) -> ShardedState:
     """One Algorithm-4 iteration from a single client's viewpoint
@@ -336,6 +400,35 @@ def _apply_client_drop(state: engine.PackedState, sign: jax.Array,
     survivor shard set with the current iterates.  No host-side repair
     step is needed; the MWU normalization IS the repair."""
     drop = (jnp.arange(sign.shape[0]) == client)[:, None]
+    return state._replace(
+        log_lam=jnp.where(drop, NEG_INF, state.log_lam),
+        log_lam_prev=jnp.where(drop, NEG_INF, state.log_lam_prev),
+        u=jnp.where(drop, 0.0, state.u),
+    ), jnp.where(drop, 0.0, sign)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=("num_shards",))
+def drop_slot_shard(state: engine.SlotState, sign: jax.Array, slot,
+                    shard, *, num_shards: int):
+    """:func:`_apply_client_drop` for ONE point-sharded serving slot:
+    zero the lost shard's sign range and send its dual weights to
+    NEG_INF / momentum to 0, so the shard's points leave every masked
+    reduction of that slot while batch-mates' rows are untouched
+    bit-for-bit.  ``slot``/``shard`` are traced (one compile per group
+    shape serves every drop target).
+
+    The point axis of a sharded slot is split CONTIGUOUSLY by
+    ``shard_map`` (unlike :func:`shard_points`' round-robin layout), so
+    shard ``s`` owns columns [s*m, (s+1)*m) with m = n_pad/num_shards.
+    The same renormalized-mass recovery rule applies: the next
+    iteration's normalizer round rescales each class's surviving dual
+    mass to 1 -- the MWU normalization IS the repair."""
+    n_pad = sign.shape[-1]
+    m = n_pad // num_shards
+    cols = (jnp.arange(n_pad) // m) == shard
+    rows = jnp.arange(sign.shape[0]) == slot
+    drop = rows[:, None] & cols[None, :]
     return state._replace(
         log_lam=jnp.where(drop, NEG_INF, state.log_lam),
         log_lam_prev=jnp.where(drop, NEG_INF, state.log_lam_prev),

@@ -674,17 +674,25 @@ def deactivate_slot(state: SlotState, slot) -> SlotState:
 
 def slot_trace_key(num_slots: int, n_pad: int, d: int, block_size: int,
                    chunk_steps: int, project: bool, check_gap: bool,
-                   backend: str) -> tuple:
+                   backend: str, axis_name=None) -> tuple:
     """The ``trace_counts`` key of one slot-chunk executable -- i.e.
-    the compile-cache key a serving layer warms per bucket."""
-    return ("slots", num_slots, n_pad, d, block_size, chunk_steps,
-            project, check_gap, backend)
+    the compile-cache key a serving layer warms per bucket.  Shapes are
+    the PER-DEVICE shapes the chunk body is traced at (``shard_map``
+    hands the body its local shard); ``axis_name`` is the point-axis
+    tuple of a sharded-slot chunk, None for the collective-free kinds.
+    """
+    key = ("slots", num_slots, n_pad, d, block_size, chunk_steps,
+           project, check_gap, backend)
+    if axis_name is not None:
+        key += ("axis", axis_name)
+    return key
 
 
 def chunk_body_slots(state: SlotState, x_t: jax.Array, sign: jax.Array,
                      sp: SlotParams, num_steps, *, chunk_steps: int,
                      d: int, block_size: int, project: bool,
-                     check_gap: bool, backend: str = "jnp"):
+                     check_gap: bool, backend: str = "jnp",
+                     axis_name=None):
     """One slot-batched chunk: ``num_steps`` (dynamic, <= static
     ``chunk_steps``) vmapped packed iterations over every lane.
 
@@ -713,11 +721,27 @@ def chunk_body_slots(state: SlotState, x_t: jax.Array, sign: jax.Array,
     bit-for-bit unaffected.  The serving layer reads the flag from the
     chunk's single host transfer and quarantines the lane.
 
+    Under ``axis_name`` (the sharded-slot serving path) every slot's
+    POINT axis is a shard: the vmapped step runs the same Theorem-8
+    collective rounds as the solo distributed step -- vmap batches each
+    round into ONE launch whose payload scales by S -- and the chunk
+    boundary adds exactly two more: the objective's psum and a health
+    agreement reduce that keeps ``active`` replica-consistent (``u`` /
+    ``log_lam`` are shard-local, so one shard's overflow must
+    quarantine the slot on EVERY shard).  ``check_gap`` is rejected:
+    the gap's water-filling sorts the full point axis and does not
+    distribute.
+
     Returns (new_state, obj (S,), healthy (S,) bool).
     """
+    if check_gap and axis_name is not None:
+        raise ValueError(
+            "check_gap is not supported for point-sharded slot chunks "
+            "(saddle_gap_packed sorts the full point axis); submit "
+            "sharded fits with gap_tol=0")
     trace_counts[slot_trace_key(
         state.num_slots, x_t.shape[-1], d, block_size, chunk_steps,
-        project, check_gap, backend)] += 1           # trace-time only
+        project, check_gap, backend, axis_name)] += 1  # trace-time only
 
     splits = jax.vmap(jax.random.split)(state.key)   # (S, 2)
     chain, chunk_key = splits[:, 0], splits[:, 1]
@@ -726,7 +750,7 @@ def chunk_body_slots(state: SlotState, x_t: jax.Array, sign: jax.Array,
     def step_slot(ps, key_i, x_t_i, sign_i, row):
         return _step_packed_core(ps, key_i, x_t_i, sign_i, row, d=d,
                                  block_size=block_size, project=project,
-                                 backend=backend)
+                                 axis_name=axis_name, backend=backend)
 
     def body(i, st):
         ps = PackedState(w=st.w, log_lam=st.log_lam,
@@ -743,13 +767,20 @@ def chunk_body_slots(state: SlotState, x_t: jax.Array, sign: jax.Array,
     state = jax.lax.fori_loop(0, num_steps, body, state)
     state = state._replace(key=chain)
 
-    obj = jax.vmap(objective_from_duals)(state.log_lam, x_t, sign)
+    obj = jax.vmap(
+        lambda ll, xt, sg: objective_from_duals(ll, xt, sg, axis_name)
+    )(state.log_lam, x_t, sign)
 
     healthy = (jnp.isfinite(state.w).all(axis=-1)
                & jnp.isfinite(state.u).all(axis=-1)
                & ~jnp.isnan(state.log_lam).any(axis=-1)
                & ~jnp.isposinf(state.log_lam).any(axis=-1)
                & jnp.isfinite(obj))
+    if axis_name is not None:
+        # u / log_lam health is shard-local: agree across point shards
+        # so the replicated ``active`` mask stays replica-consistent.
+        healthy = _all_sum(
+            jnp.where(healthy, 0.0, 1.0), axis_name) == 0.0
 
     done = (state.t >= state.max_t) | ~healthy
     if check_gap:
@@ -778,6 +809,115 @@ def run_chunk_slots(state: SlotState, x_t: jax.Array, sign: jax.Array,
                             chunk_steps=chunk_steps, d=d,
                             block_size=block_size, project=project,
                             check_gap=check_gap, backend=backend)
+
+
+# --------------------------------------------------------------------------
+# Mesh-sharded slot chunk: the SAME chunk body under shard_map, with two
+# orthogonal placements a serving layer composes per slot group:
+#
+#   slot_axes    the SLOT axis is data-parallel over these mesh axes --
+#                each device owns its own lanes, steps them with
+#                axis_name=None, and exchanges ZERO loop collectives
+#                (the unsharded slot-group placement).
+#   point_axes   every slot's POINT axis spans these mesh axes and the
+#                step runs the Theorem-8 collective rounds over them
+#                (the sharded-slot placement for large-n fits).
+# --------------------------------------------------------------------------
+
+
+def _normalize_axes(point_axes) -> tuple | None:
+    """The in-step ``axis_name`` for a point-axis tuple (None == serial)."""
+    return tuple(point_axes) or None
+
+
+def sharded_slot_run_fn(mesh: jax.sharding.Mesh, *, slot_axes=(),
+                        point_axes=(), chunk_steps: int, d: int,
+                        block_size: int, project: bool,
+                        check_gap: bool = False, backend: str = "jnp"):
+    """UN-jitted ``shard_map``-wrapped slot chunk over ``mesh`` (AOT
+    lowering / audit entry; :func:`run_chunk_slots_sharded` is the
+    dispatch path).  Placement per the module-level table: the slot
+    axis shards over ``slot_axes``, the point axis over ``point_axes``
+    (disjoint; either may be empty).  Per-slot lifecycle rows (``t``,
+    ``max_t``, ``key``, ``active``) and ``w`` are replicated across
+    ``point_axes``; ``check_rep=False`` because psum-produced outputs
+    defeat shard_map's static replication check.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    slot_axes, point_axes = tuple(slot_axes), tuple(point_axes)
+    overlap = set(slot_axes) & set(point_axes)
+    if overlap:
+        raise ValueError(f"slot_axes and point_axes overlap: {overlap}")
+    for a in slot_axes + point_axes:
+        if a not in mesh.axis_names:
+            raise ValueError(f"axis {a!r} not in mesh {mesh.axis_names}")
+    axis_name = _normalize_axes(point_axes)
+
+    s = slot_axes or None           # slot-dim placement
+    p = point_axes or None          # point-dim placement
+    state_spec = SlotState(
+        w=P(s), log_lam=P(s, p), log_lam_prev=P(s, p), u=P(s, p),
+        t=P(s), max_t=P(s), key=P(s), active=P(s))
+    sp_spec = SlotParams(*(P(s) for _ in SlotParams._fields))
+
+    def local_fn(st, x_t, sign, sp, num_steps):
+        return chunk_body_slots(
+            st, x_t, sign, sp, num_steps, chunk_steps=chunk_steps, d=d,
+            block_size=block_size, project=project, check_gap=check_gap,
+            backend=backend, axis_name=axis_name)
+
+    return shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(state_spec, P(s, None, p), P(s, p), sp_spec, P()),
+        out_specs=(state_spec, P(s), P(s)),
+        check_rep=False)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_slot_runner(mesh, slot_axes, point_axes, chunk_steps, d,
+                         block_size, project, check_gap, backend):
+    return jax.jit(
+        sharded_slot_run_fn(mesh, slot_axes=slot_axes,
+                            point_axes=point_axes, chunk_steps=chunk_steps,
+                            d=d, block_size=block_size, project=project,
+                            check_gap=check_gap, backend=backend),
+        donate_argnums=(0,))
+
+
+def run_chunk_slots_sharded(state: SlotState, x_t: jax.Array,
+                            sign: jax.Array, sp: SlotParams, num_steps, *,
+                            mesh: jax.sharding.Mesh, slot_axes=(),
+                            point_axes=(), chunk_steps: int, d: int,
+                            block_size: int, project: bool,
+                            check_gap: bool = False,
+                            backend: str = "jnp"):
+    """Mesh-sharded :func:`run_chunk_slots`: same signature and return
+    contract plus the (mesh, slot_axes, point_axes) placement, slot
+    state donated.  The jitted runner is cached per placement+statics
+    (``Mesh`` hashes by device assignment), so the serving layer pays
+    one trace per warmed bucket exactly as on a single device."""
+    run = _sharded_slot_runner(mesh, tuple(slot_axes), tuple(point_axes),
+                               chunk_steps, d, block_size, project,
+                               check_gap, backend)
+    return run(state, x_t, sign, sp, jnp.asarray(num_steps, jnp.int32))
+
+
+def sharded_slot_trace_key(num_slots: int, n_pad: int, d: int,
+                           block_size: int, chunk_steps: int,
+                           project: bool, check_gap: bool, backend: str,
+                           mesh: jax.sharding.Mesh, slot_axes=(),
+                           point_axes=()) -> tuple:
+    """:func:`slot_trace_key` of one mesh-sharded chunk executable, from
+    GLOBAL shapes: shard_map traces the body at the per-device shard, so
+    the slot dim divides by the slot-axes extent and the point dim by
+    the point-axes extent."""
+    ks = math.prod(mesh.shape[a] for a in slot_axes) if slot_axes else 1
+    kp = math.prod(mesh.shape[a] for a in point_axes) if point_axes else 1
+    return slot_trace_key(num_slots // ks, n_pad // kp, d, block_size,
+                          chunk_steps, project, check_gap, backend,
+                          _normalize_axes(tuple(point_axes)))
 
 
 @functools.partial(jax.jit,

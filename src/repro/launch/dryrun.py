@@ -173,6 +173,89 @@ def run_one_saddle(shape_name: str, multi_pod: bool,
     return rec
 
 
+def run_one_saddle_serve(shape_name: str, multi_pod: bool,
+                         verbose: bool = True) -> dict:
+    """Lower + compile the mesh-sharded SERVING slot chunk on the
+    dry-run mesh and pin its collectives exactly: the lanes placement
+    must compile collective-FREE, the points placement must match
+    ``ServeCommModel`` on BOTH the per-iteration and per-chunk
+    multisets.  Any mismatch raises."""
+    from repro.utils import comm_audit
+
+    shape = specs_mod.SADDLE_SERVE_SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": specs_mod.SERVE_ARCH, "shape": shape_name,
+           "mesh": mesh_name, "applicable": True, "reason": "ok"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        fn, args, meta = specs_mod.build_saddle_serve_lowerable(mesh,
+                                                                shape)
+        lowered = jax.jit(fn, donate_argnums=(0,)).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        roof = rl.analyze(compiled)
+
+    model = meta["model"]
+    counts = comm_audit.audit_hlo(compiled.as_text(),
+                                  has_step_loop=shape.sharded)
+    if model is not None:
+        predicted = model.collective_multiset(meta["block_size"])
+        predicted_chunk = model.per_chunk_multiset(meta["d"])
+    else:
+        predicted, predicted_chunk = {}, {}
+    rec.update({
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": _mem_dict(mem),
+        "hlo_flops_per_device": roof.flops,
+        "hlo_bytes_per_device": roof.hbm_bytes,
+        "collective_bytes_per_device": roof.collective_bytes,
+        "comm_audit": {
+            "slot_axes": list(meta["slot_axes"]),
+            "point_axes": list(meta["point_axes"]),
+            "k_slots": meta["k_slots"], "k_points": meta["k_points"],
+            "nu": meta["nu"], "num_slots": meta["num_slots"],
+            "n_pad": meta["n_pad"],
+            "block_size": meta["block_size"],
+            "chunk_steps": meta["chunk_steps"],
+            "measured_per_iteration":
+                comm_audit.multiset_to_json(counts.per_iteration),
+            "predicted_per_iteration":
+                comm_audit.multiset_to_json(predicted),
+            "measured_per_chunk":
+                comm_audit.multiset_to_json(counts.per_chunk),
+            "predicted_per_chunk":
+                comm_audit.multiset_to_json(predicted_chunk),
+            "match": (counts.per_iteration == predicted
+                      and counts.per_chunk == predicted_chunk),
+            "per_iteration_count": counts.per_iteration_count,
+            "per_iteration_bytes": counts.per_iteration_bytes,
+        },
+    })
+    if not rec["comm_audit"]["match"]:
+        raise RuntimeError(
+            f"saddle-serve {shape_name} x {mesh_name}: measured "
+            f"collectives iter="
+            f"{rec['comm_audit']['measured_per_iteration']} chunk="
+            f"{rec['comm_audit']['measured_per_chunk']} != model iter="
+            f"{rec['comm_audit']['predicted_per_iteration']} chunk="
+            f"{rec['comm_audit']['predicted_per_chunk']}")
+    if verbose:
+        ca = rec["comm_audit"]
+        placement = (f"slots/{'x'.join(ca['slot_axes']) or '-'} "
+                     f"points/{'x'.join(ca['point_axes']) or '-'}")
+        print(f"[dryrun] {specs_mod.SERVE_ARCH} x {shape_name} x "
+              f"{mesh_name}: OK  {placement}  "
+              f"S={ca['num_slots']} n_pad={ca['n_pad']}  "
+              f"collectives/iter {ca['per_iteration_count']}  "
+              f"bytes/iter {ca['per_iteration_bytes']}  "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description="multi-pod dry-run")
     ap.add_argument("--arch", default=None,
@@ -189,12 +272,16 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.shape and args.shape not in SHAPES \
-            and args.shape not in specs_mod.SADDLE_DSVC_SHAPES:
+            and args.shape not in specs_mod.SADDLE_DSVC_SHAPES \
+            and args.shape not in specs_mod.SADDLE_SERVE_SHAPES:
         raise SystemExit(
             f"unknown --shape {args.shape!r}: LM shapes {sorted(SHAPES)}, "
-            f"solver shapes {sorted(specs_mod.SADDLE_DSVC_SHAPES)}")
+            f"solver shapes {sorted(specs_mod.SADDLE_DSVC_SHAPES)}, "
+            f"serve shapes {sorted(specs_mod.SADDLE_SERVE_SHAPES)}")
     solver_only = args.arch == specs_mod.SOLVER_ARCH
-    archs = [] if solver_only else ([args.arch] if args.arch else ASSIGNED)
+    serve_only = args.arch == specs_mod.SERVE_ARCH
+    archs = [] if (solver_only or serve_only) \
+        else ([args.arch] if args.arch else ASSIGNED)
     # the solver entry has its own shape namespace (point counts, not
     # token shapes), so a --shape pick routes to exactly one of the two
     lm_shapes = ([args.shape] if args.shape in SHAPES
@@ -206,13 +293,19 @@ def main() -> None:
         # the dense->SWA variant that licenses long_500k for gemma
         combos.append(("gemma-7b-swa", "long_500k"))
 
-    # saddle-dsvc joins the sweep by default and via --arch
+    # saddle-dsvc / saddle-serve join the sweep by default and via --arch
     if solver_only or args.arch is None:
         solver_shapes = (
             [args.shape] if args.shape in specs_mod.SADDLE_DSVC_SHAPES
             else ([] if args.shape else
                   list(specs_mod.SADDLE_DSVC_SHAPES)))
         combos += [(specs_mod.SOLVER_ARCH, s) for s in solver_shapes]
+    if serve_only or args.arch is None:
+        serve_shapes = (
+            [args.shape] if args.shape in specs_mod.SADDLE_SERVE_SHAPES
+            else ([] if args.shape else
+                  list(specs_mod.SADDLE_SERVE_SHAPES)))
+        combos += [(specs_mod.SERVE_ARCH, s) for s in serve_shapes]
     if not combos:
         raise SystemExit(
             f"no (arch, shape) combinations: --arch {args.arch!r} does "
@@ -228,6 +321,8 @@ def main() -> None:
                 try:
                     if arch == specs_mod.SOLVER_ARCH:
                         rec = run_one_saddle(shape, mp)
+                    elif arch == specs_mod.SERVE_ARCH:
+                        rec = run_one_saddle_serve(shape, mp)
                     else:
                         rec = run_one(arch, shape, mp,
                                       unroll=args.unroll)

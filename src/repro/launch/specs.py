@@ -209,6 +209,105 @@ def build_saddle_dsvc_lowerable(mesh, shape: SaddleDsvcShape,
     return fn, args, meta
 
 
+# ---------------------------------------------- saddle-serve (mesh serving)
+SERVE_ARCH = "saddle-serve"
+
+
+class SaddleServeShape(_NamedTuple):
+    """Input shape for the mesh-sharded serving dry-run entry (the
+    ``engine.run_chunk_slots_sharded`` slot chunk).
+
+    ``sharded=False`` is the heavy-traffic LANES placement: the slot
+    dim spans every mesh axis, each device owns whole lanes and the
+    chunk must lower collective-free.  ``sharded=True`` is the big-fit
+    POINTS placement, hybrid over the production meshes: slots span
+    the ``model`` axis (independent lane columns) while each lane's
+    point dim spans the remaining axes (``data`` / ``pod x data``) and
+    runs the Theorem-8 rounds.  ``n1``/``n2`` are PER-SLOT point
+    counts; ``num_slots`` is the GLOBAL lane count."""
+    name: str
+    num_slots: int
+    n1: int
+    n2: int
+    d: int
+    nu_frac: float        # 0 => HM; else nu = 1 / (nu_frac * n1)
+    block_size: int
+    chunk_steps: int
+    sharded: bool
+
+
+SADDLE_SERVE_SHAPES: dict[str, SaddleServeShape] = {
+    # heavy traffic: 512 concurrent mid-size nu-SVM fits, 2 (single
+    # pod) or 1 (multi-pod) lanes per device, zero collectives
+    "serve_lanes_512": SaddleServeShape(
+        "serve_lanes_512", 512, 1500, 1400, 64, 0.8, 1, 50, False),
+    # big fits: 32 lanes of 1M points each; slots over 'model', points
+    # over the data axes -- one serving executable at paper scale
+    "serve_points_1m": SaddleServeShape(
+        "serve_points_1m", 32, 1 << 19, 1 << 19, 256, 0.8, 128, 50,
+        True),
+}
+
+
+def saddle_serve_placement(mesh, shape: SaddleServeShape):
+    """(slot_axes, point_axes) of ``shape`` on ``mesh`` -- the single
+    source of the production placement rule described on
+    :class:`SaddleServeShape`."""
+    axes = tuple(mesh.axis_names)
+    if not shape.sharded:
+        return axes, ()
+    if "model" not in axes:
+        raise ValueError(
+            f"points placement needs a 'model' axis, mesh has {axes}")
+    return ("model",), tuple(a for a in axes if a != "model")
+
+
+def build_saddle_serve_lowerable(mesh, shape: SaddleServeShape,
+                                 backend: str = "jnp"):
+    """Returns (fn, args, meta) ready for
+    ``jit(fn, donate_argnums=(0,)).lower(*args)``: the mesh-sharded
+    serving slot chunk with the production placement, all args
+    ShapeDtypeStructs.  ``meta`` carries the placement extents and the
+    :class:`repro.core.distributed.ServeCommModel` (None for the
+    collective-free lanes placement) so the dry-run can pin the
+    lowered module's collectives exactly."""
+    from repro.core import distributed, projections
+    from repro.core.preprocess import bucket_length
+    from repro.utils import comm_audit
+
+    slot_axes, point_axes = saddle_serve_placement(mesh, shape)
+    ks = int(math.prod(mesh.shape[a] for a in slot_axes)) \
+        if slot_axes else 1
+    kp = int(math.prod(mesh.shape[a] for a in point_axes)) \
+        if point_axes else 1
+    if shape.num_slots % ks:
+        raise ValueError(
+            f"{shape.name}: num_slots={shape.num_slots} not divisible "
+            f"by the slot-axes extent {ks}")
+    n = shape.n1 + shape.n2
+    # the service bucket rule: per-shard lane-aligned power-of-2 rung
+    n_pad = kp * bucket_length(-(-n // kp)) if point_axes \
+        else bucket_length(n)
+    nu = 1.0 / (shape.nu_frac * shape.n1) if shape.nu_frac else 0.0
+    fn, args = comm_audit.serve_runner_lowerable(
+        mesh, num_slots=shape.num_slots, n_pad=n_pad, d=shape.d, nu=nu,
+        block_size=shape.block_size, chunk_steps=shape.chunk_steps,
+        backend=backend, slot_axes=slot_axes, point_axes=point_axes)
+    model = None
+    if point_axes:
+        rounds = float(projections.BISECT_ROUNDS_SOLVER) if nu > 0 \
+            else 0.0
+        model = distributed.ServeCommModel(
+            k=kp, num_slots=shape.num_slots // ks,
+            nu_rounds_per_iter=rounds)
+    meta = {"slot_axes": slot_axes, "point_axes": point_axes,
+            "k_slots": ks, "k_points": kp, "nu": nu, "model": model,
+            "num_slots": shape.num_slots, "n_pad": n_pad, "d": shape.d,
+            "block_size": shape.block_size,
+            "chunk_steps": shape.chunk_steps}
+    return fn, args, meta
+
+
 # ------------------------------------------------------------ step builders
 def opt_config(cfg) -> opt.AdamWConfig:
     return opt.AdamWConfig(state_dtype=cfg.optimizer_state_dtype)

@@ -358,13 +358,33 @@ class Scheduler:
         return list(self._groups.values())
 
     def group(self, key: Any,
-              payload_factory: Callable[[], Any] | None = None) -> Group:
+              payload_factory: Callable[[], Any] | None = None,
+              num_slots: int | None = None) -> Group:
         """Get-or-create the slot group for ``key`` (insertion order is
-        the round-robin policy's rotation order)."""
+        the round-robin policy's rotation order).
+
+        ``key`` is opaque to the scheduler; the workload picks it so
+        that requests sharing a key share one compiled executable.  The
+        solver service keys by (bucket, shard-placement): the bucket
+        tuple -- padded shapes plus the step statics -- PLUS, on a
+        device mesh, the slot's placement kind (lane-parallel unsharded
+        slots vs point-sharded large-n slots).  Two fits with identical
+        buckets but different placements lower to different
+        ``shard_map`` programs with different collective budgets, so
+        they must never share a lane table; everything the scheduler
+        does (queueing, admission, eviction, stats) is per-key and
+        therefore placement-local for free.
+
+        ``num_slots`` overrides the scheduler-wide lane count for THIS
+        group at creation (point-sharded groups run few large-n lanes
+        where lane-parallel groups run many); ignored if the group
+        already exists.
+        """
         g = self._groups.get(key)
         if g is None:
             payload = payload_factory() if payload_factory else None
-            g = self._groups[key] = Group(key, self.num_slots, payload)
+            g = self._groups[key] = Group(
+                key, num_slots or self.num_slots, payload)
         return g
 
     def has_work(self) -> bool:
@@ -373,11 +393,13 @@ class Scheduler:
     # ---------------------------------------------------------- intake
     def submit(self, key: Any, rid: int, payload: Any = None, *,
                priority: int = 0, deadline: float | None = None,
-               payload_factory: Callable[[], Any] | None = None) -> Ticket:
+               payload_factory: Callable[[], Any] | None = None,
+               num_slots: int | None = None) -> Ticket:
         """Enqueue a request on its group's queue; stamps arrival order
         and wall-clock submit time (queue-to-result latency starts
-        here)."""
-        g = self.group(key, payload_factory)
+        here).  ``num_slots`` sizes the group if this submit creates
+        it (see :meth:`group`)."""
+        g = self.group(key, payload_factory, num_slots)
         t = Ticket(rid, payload, priority, deadline,
                    next(self._arrival), time.perf_counter())
         g.enqueue(t)

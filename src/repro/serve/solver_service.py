@@ -21,6 +21,24 @@ idle-batch eviction, queue-to-result latency stamps and compile-cache
 accounting all live in the scheduler and are shared verbatim with the
 LM service (:mod:`repro.serve.lm_service`).
 
+Mesh-sharded serving
+--------------------
+
+Constructed with a ``mesh`` the service runs every chunk through
+``engine.run_chunk_slots_sharded`` and composes the paper's two scale
+axes under ONE scheduler and one executable family: ordinary requests
+land in LANE-PARALLEL groups (the slot axis shards over every mesh
+axis; each device steps its own lanes with zero cross-device traffic
+-- admission, quarantine and cancel all stay lane-local), while
+requests above ``shard_points_above`` points land in POINT-SHARDED
+groups whose slots span the mesh and pay exactly the solo distributed
+step's Theorem-8 collective rounds per iteration (vmap batches each
+round across the group's lanes into one launch; see
+``distributed.ServeCommModel``).  The shard placement is part of the
+scheduler group key -- see :meth:`repro.serve.scheduler.Scheduler.
+group` -- and a 1-device mesh reproduces the meshless service
+bit-for-bit (tested in ``tests/test_mesh_service.py``).
+
 Shape buckets
 -------------
 
@@ -120,6 +138,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import engine
 from repro.core import preprocess as pp
@@ -192,14 +211,32 @@ class _Batch:
     and nu-SVM requests live in separate batches): a request's
     executable -- and therefore its numeric trajectory -- is fully
     determined by the request itself, never by which co-tenants happen
-    to share its bucket at admission time."""
+    to share its bucket at admission time.
+
+    On a device ``mesh`` the batch also owns its SHARD PLACEMENT (the
+    second component of the scheduler group key):
+
+      * lane-parallel (``point_sharded=False``): the slot axis shards
+        over every mesh axis -- each device owns ``S / mesh.size``
+        whole lanes and the chunk exchanges ZERO collectives;
+      * point-sharded (``point_sharded=True``): every slot's POINT axis
+        spans the mesh and the chunk runs the Theorem-8 collective
+        rounds (large-n fits; see ``engine.run_chunk_slots_sharded``).
+
+    The buffers are created under :class:`~jax.sharding.NamedSharding`
+    so the first chunk already lowers at the placement the whole group
+    lifetime keeps."""
 
     def __init__(self, bucket: tuple[int, int], num_slots: int,
-                 project: bool, check_gap: bool):
+                 project: bool, check_gap: bool,
+                 mesh: jax.sharding.Mesh | None = None,
+                 point_sharded: bool = False):
         n_pad, d_pad = bucket
         self.bucket = bucket
         self.project = project
         self.check_gap = check_gap
+        self.mesh = mesh
+        self.point_sharded = point_sharded
         self.state = engine.init_slot_state(num_slots, n_pad, d_pad)
         self.x_t = jnp.zeros((num_slots, d_pad, n_pad), jnp.float32)
         self.sign = jnp.zeros((num_slots, n_pad), jnp.float32)
@@ -209,6 +246,47 @@ class _Batch:
                               gamma=1.0, tau=1.0, mwu_c=1.0, mwu_dot=1.0,
                               nu=1.0, gap_tol=0.0))
         self.sp_dev = None                      # device mirror of sp
+        if mesh is None:
+            self.slot_axes: tuple = ()
+            self.point_axes: tuple = ()
+            self.shardings = None
+            self.sp_sharding = None
+        else:
+            axes = tuple(mesh.axis_names)
+            self.slot_axes, self.point_axes = (
+                ((), axes) if point_sharded else (axes, ()))
+            s = self.slot_axes or None
+            p = self.point_axes or None
+            mk = lambda spec: NamedSharding(mesh, spec)   # noqa: E731
+            state_sh = engine.SlotState(
+                w=mk(PartitionSpec(s)),
+                log_lam=mk(PartitionSpec(s, p)),
+                log_lam_prev=mk(PartitionSpec(s, p)),
+                u=mk(PartitionSpec(s, p)),
+                t=mk(PartitionSpec(s)), max_t=mk(PartitionSpec(s)),
+                key=mk(PartitionSpec(s)), active=mk(PartitionSpec(s)))
+            self.shardings = (state_sh,
+                              mk(PartitionSpec(s, None, p)),
+                              mk(PartitionSpec(s, p)))
+            self.sp_sharding = engine.SlotParams(
+                *(mk(PartitionSpec(s))
+                  for _ in engine.SlotParams._fields))
+            self.state = jax.device_put(self.state, state_sh)
+            self.x_t = jax.device_put(self.x_t, self.shardings[1])
+            self.sign = jax.device_put(self.sign, self.shardings[2])
+
+    def ensure_placement(self) -> None:
+        """Re-pin any buffer whose sharding drifted off the batch's
+        placement (admission writers are sharding-preserving in
+        practice; this is the cheap invariant guard that keeps the
+        chunk executable's jit cache keyed at ONE sharding)."""
+        if self.shardings is None:
+            return
+        fix = lambda a, sh: (a if a.sharding == sh          # noqa: E731
+                             else jax.device_put(a, sh))
+        self.state = jax.tree.map(fix, self.state, self.shardings[0])
+        self.x_t = fix(self.x_t, self.shardings[1])
+        self.sign = fix(self.sign, self.shardings[2])
 
 
 class SolverService:
@@ -233,10 +311,32 @@ class SolverService:
     def __init__(self, num_slots: int = 8, chunk_steps: int = 64,
                  backend: str = "jnp", policy: str = "oldest",
                  clock=None, fault_injector=None,
-                 max_points: int = 1 << 20, max_dim: int = 1 << 14):
+                 max_points: int = 1 << 20, max_dim: int = 1 << 14,
+                 mesh: jax.sharding.Mesh | None = None,
+                 shard_points_above: int | None = None,
+                 shard_num_slots: int = 2):
         self.num_slots = num_slots
         self.chunk_steps = chunk_steps
         self.backend = backend
+        # Mesh-sharded serving (opt-in): with a ``mesh`` every batch
+        # runs under shard_map.  Ordinary requests land in
+        # lane-parallel groups (slots sharded over every mesh axis,
+        # zero collectives -- ``num_slots`` must divide into
+        # ``mesh.size`` whole lanes per device).  Requests with more
+        # than ``shard_points_above`` points land in POINT-SHARDED
+        # groups of ``shard_num_slots`` lanes whose points span the
+        # mesh (Theorem-8 collectives); None disables point sharding.
+        # A 1-device mesh reproduces the meshless service bit-for-bit:
+        # shard_map over one device partitions nothing and the chunk
+        # body is the identical computation.
+        self.mesh = mesh
+        self._mesh_k = 1 if mesh is None else int(mesh.size)
+        if mesh is not None and num_slots % self._mesh_k:
+            raise ValueError(
+                f"num_slots={num_slots} must be divisible by the mesh "
+                f"device count {self._mesh_k} (whole lanes per device)")
+        self.shard_points_above = shard_points_above
+        self.shard_num_slots = shard_num_slots
         # Deadline semantics are OPT-IN: without a clock, deadlines are
         # pure urgency ordering (any orderable float, the historical
         # contract); with ``clock`` (e.g. ``time.monotonic``) queued
@@ -308,11 +408,41 @@ class SolverService:
         # executable and the warm-up set is exactly the batch set
         project = req.nu > 0.0
         check_gap = req.gap_tol > 0.0
-        batch_key = bucket + (req.block_size, project, check_gap)
+        point_sharded = (self.mesh is not None
+                         and self.shard_points_above is not None
+                         and n1 + n2 > self.shard_points_above)
+        if point_sharded and check_gap:
+            raise ValueError(
+                "FitRequest.gap_tol > 0 is not supported for "
+                "point-sharded fits (the duality gap's water-filling "
+                "sorts the full point axis and does not distribute); "
+                "submit with gap_tol=0 or below the shard threshold")
+        if point_sharded:
+            # the point axis must split into whole lane-aligned shards:
+            # per-shard pow-2 rung times the mesh extent (>= the plain
+            # rung whenever mesh.size is a power of two)
+            k = self._mesh_k
+            bucket = (k * pp.bucket_length(-(-(n1 + n2) // k)), bucket[1])
+        # on a mesh, placement is part of the group key (see
+        # Scheduler.group): same bucket, different shard_map program
+        if self.mesh is None:
+            placement: tuple = ()
+            group_slots = self.num_slots
+        elif point_sharded:
+            placement = ("points", self._mesh_k)
+            group_slots = self.shard_num_slots
+        else:
+            placement = ("lanes", self._mesh_k)
+            group_slots = self.num_slots
+        batch_key = bucket + (req.block_size, project, check_gap) \
+            + placement
         ticket = self._sched.submit(
             batch_key, rid, req, priority=priority, deadline=deadline,
-            payload_factory=lambda: _Batch(bucket, self.num_slots,
-                                           project, check_gap))
+            payload_factory=lambda: _Batch(bucket, group_slots,
+                                           project, check_gap,
+                                           mesh=self.mesh,
+                                           point_sharded=point_sharded),
+            num_slots=group_slots)
         self._pre_cache[rid] = pre
         self._tickets[rid] = ticket
         return rid
@@ -440,9 +570,15 @@ class SolverService:
         n_pad, d_pad = batch.bucket
         project, check_gap = batch.project, batch.check_gap
         block_size = next(iter(group.slots.values())).payload.block_size
-        key = engine.slot_trace_key(self.num_slots, n_pad, d_pad,
-                                    block_size, self.chunk_steps,
-                                    project, check_gap, self.backend)
+        if batch.mesh is None:
+            key = engine.slot_trace_key(group.num_slots, n_pad, d_pad,
+                                        block_size, self.chunk_steps,
+                                        project, check_gap, self.backend)
+        else:
+            key = engine.sharded_slot_trace_key(
+                group.num_slots, n_pad, d_pad, block_size,
+                self.chunk_steps, project, check_gap, self.backend,
+                batch.mesh, batch.slot_axes, batch.point_axes)
         # Always run FULL chunks: a slot near its budget is frozen by
         # the per-slot mask at exactly max_t, which keeps every slot's
         # chunk/key schedule identical to a solo solve with
@@ -451,6 +587,9 @@ class SolverService:
         # a partial FIRST chunk no solo schedule ever takes.
         if batch.sp_dev is None:
             batch.sp_dev = jax.tree.map(jnp.asarray, batch.sp)
+            if batch.sp_sharding is not None:
+                batch.sp_dev = jax.device_put(batch.sp_dev,
+                                              batch.sp_sharding)
         # Deterministic fault injection (tests/bench only): poison a
         # targeted lane BEFORE its chunk; the jitted helper is keyed
         # outside the chunk executables, so zero-recompile accounting
@@ -462,13 +601,25 @@ class SolverService:
                                              len(ticket.note.history)):
                     batch.state = faults_mod.poison_slot_state(
                         batch.state, lane)
+        batch.ensure_placement()
         with self._sched.stats.chunk(key, engine.trace_counts):
-            batch.state, obj, healthy = engine.run_chunk_slots(
-                batch.state, batch.x_t, batch.sign, batch.sp_dev,
-                self.chunk_steps,
-                chunk_steps=self.chunk_steps, d=d_pad,
-                block_size=block_size, project=project,
-                check_gap=check_gap, backend=self.backend)
+            if batch.mesh is None:
+                batch.state, obj, healthy = engine.run_chunk_slots(
+                    batch.state, batch.x_t, batch.sign, batch.sp_dev,
+                    self.chunk_steps,
+                    chunk_steps=self.chunk_steps, d=d_pad,
+                    block_size=block_size, project=project,
+                    check_gap=check_gap, backend=self.backend)
+            else:
+                batch.state, obj, healthy = \
+                    engine.run_chunk_slots_sharded(
+                        batch.state, batch.x_t, batch.sign,
+                        batch.sp_dev, self.chunk_steps,
+                        mesh=batch.mesh, slot_axes=batch.slot_axes,
+                        point_axes=batch.point_axes,
+                        chunk_steps=self.chunk_steps, d=d_pad,
+                        block_size=block_size, project=project,
+                        check_gap=check_gap, backend=self.backend)
         out = self._harvest(group, obj, healthy)
         # Idle-batch eviction: a drained batch's device buffers (slot
         # state + the (S, d, n) operand) would otherwise leak device

@@ -312,6 +312,88 @@ def lower_runner(k: int, *, n1: int, n2: int, d: int, nu: float,
     return jax.jit(fn).lower(*args).compile().as_text()
 
 
+def serve_structs(mesh, *, num_slots: int, n_pad: int, d: int,
+                  slot_axes=(), point_axes=()):
+    """ShapeDtypeStruct stand-ins for one serving slot chunk:
+    (state, x_t, sign, sp, num_steps) with the placement's
+    NamedShardings (slot dim over ``slot_axes``, point dim over
+    ``point_axes``) -- the exact argument layout
+    ``engine.run_chunk_slots_sharded`` dispatches with."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import engine
+
+    s = tuple(slot_axes) or None
+    p = tuple(point_axes) or None
+
+    def sds(shape, dtype=jnp.float32, spec=P()):
+        return jax.ShapeDtypeStruct(
+            shape, dtype, sharding=NamedSharding(mesh, spec))
+
+    key_aval = jax.eval_shape(
+        lambda: jax.random.split(jax.random.key(0), num_slots))
+    state = engine.SlotState(
+        w=sds((num_slots, d), spec=P(s)),
+        log_lam=sds((num_slots, n_pad), spec=P(s, p)),
+        log_lam_prev=sds((num_slots, n_pad), spec=P(s, p)),
+        u=sds((num_slots, n_pad), spec=P(s, p)),
+        t=sds((num_slots,), jnp.int32, spec=P(s)),
+        max_t=sds((num_slots,), jnp.int32, spec=P(s)),
+        key=sds(key_aval.shape, key_aval.dtype, spec=P(s)),
+        active=sds((num_slots,), jnp.bool_, spec=P(s)))
+    x_t = sds((num_slots, d, n_pad), spec=P(s, None, p))
+    sign = sds((num_slots, n_pad), spec=P(s, p))
+    sp = engine.SlotParams(*(sds((num_slots,), spec=P(s))
+                             for _ in engine.SlotParams._fields))
+    num_steps = sds((), jnp.int32)
+    return state, x_t, sign, sp, num_steps
+
+
+def serve_runner_lowerable(mesh, *, num_slots: int, n_pad: int, d: int,
+                           nu: float, block_size: int = 1,
+                           chunk_steps: int = 8, backend: str = "jnp",
+                           slot_axes=(), point_axes=()):
+    """(fn, args) for ``jit(fn, donate_argnums=(0,)).lower(*args)``: the
+    serving slot chunk (``engine.sharded_slot_run_fn``) over
+    ShapeDtypeStructs.  Single source of the serve-chunk lowering
+    recipe, shared with ``launch.specs.build_saddle_serve_lowerable``.
+    ``project`` follows the service rule (nu > 0)."""
+    from repro.core import engine
+
+    fn = engine.sharded_slot_run_fn(
+        mesh, slot_axes=tuple(slot_axes), point_axes=tuple(point_axes),
+        chunk_steps=chunk_steps, d=d, block_size=block_size,
+        project=nu > 0.0, check_gap=False, backend=backend)
+    args = serve_structs(mesh, num_slots=num_slots, n_pad=n_pad, d=d,
+                         slot_axes=slot_axes, point_axes=point_axes)
+    return fn, args
+
+
+def lower_serve_chunk(k: int, *, num_slots: int, n_pad: int, d: int,
+                      nu: float, block_size: int = 1,
+                      chunk_steps: int = 8, backend: str = "jnp",
+                      sharded: bool, mesh=None) -> str:
+    """Compile one serving slot chunk on a k-client mesh and return the
+    post-SPMD HLO text.  ``sharded=False`` is the lanes placement (slot
+    dim over the mesh, zero collectives anywhere); ``sharded=True`` is
+    the point-sharded placement (point dim over the mesh, Theorem-8
+    rounds).  ``num_slots``/``n_pad`` are GLOBAL extents."""
+    import jax
+
+    mesh = mesh if mesh is not None else client_mesh(k)
+    axes = tuple(mesh.axis_names)
+    slot_axes, point_axes = ((), axes) if sharded else (axes, ())
+    fn, args = serve_runner_lowerable(
+        mesh, num_slots=num_slots, n_pad=n_pad, d=d, nu=nu,
+        block_size=block_size, chunk_steps=chunk_steps, backend=backend,
+        slot_axes=slot_axes, point_axes=point_axes)
+    return (jax.jit(fn, donate_argnums=(0,))
+            .lower(*args).compile().as_text())
+
+
 # ==========================================================================
 # Spec-driven audits (subprocess-friendly records).
 # ==========================================================================
@@ -321,10 +403,15 @@ def audit_spec(spec: dict) -> dict:
 
     Spec keys: k, n1, n2, d, nu, block_size (default 1), backend
     (default jnp), runner (bool: also audit the full chunk lowering),
-    chunk_steps (runner only, default 8).
+    chunk_steps (runner only, default 8).  ``kind="serve"`` audits a
+    serving slot chunk instead (see :func:`audit_serve_spec`): extra
+    keys num_slots and sharded (lanes vs point-sharded placement).
     """
     from repro.core import projections
     from repro.core.distributed import CommModel
+
+    if spec.get("kind") == "serve":
+        return audit_serve_spec(spec)
 
     k = int(spec["k"])
     n1, n2, d = int(spec["n1"]), int(spec["n2"]), int(spec["d"])
@@ -366,6 +453,89 @@ def audit_spec(spec: dict) -> dict:
             "runner_match": run.per_iteration == predicted,
             "runner_matches_step":
                 run.per_iteration == step.per_iteration,
+        })
+    return rec
+
+
+def audit_serve_spec(spec: dict) -> dict:
+    """Audit one SERVING slot chunk against :class:`ServeCommModel`.
+
+    Spec keys: kind="serve", k, num_slots (global), n1, n2 (per-slot
+    point counts), d, nu, sharded (bool placement switch), block_size
+    (default 1), chunk_steps (default 8), backend (default jnp).
+
+    The bucket rule mirrors ``SolverService.submit``: lanes placement
+    pads to ``bucket_length(n1 + n2)``; the point-sharded placement to
+    ``k * bucket_length(ceil((n1 + n2) / k))`` so every shard holds a
+    lane-aligned power-of-2 rung.
+
+    Contract pinned here: the lanes placement compiles to ZERO
+    collectives anywhere in the module (``has_step_loop=False``, both
+    multisets empty -- slot groups never talk across devices); the
+    point-sharded placement's step loop carries EXACTLY
+    ``ServeCommModel.collective_multiset`` and its chunk boundary
+    EXACTLY ``ServeCommModel.per_chunk_multiset``."""
+    from repro.core import preprocess, projections
+    from repro.core.distributed import ServeCommModel
+
+    k = int(spec["k"])
+    num_slots = int(spec["num_slots"])
+    n1, n2, d = int(spec["n1"]), int(spec["n2"]), int(spec["d"])
+    nu = float(spec.get("nu", 0.0))
+    block_size = int(spec.get("block_size", 1))
+    chunk_steps = int(spec.get("chunk_steps", 8))
+    backend = spec.get("backend", "jnp")
+    sharded = bool(spec["sharded"])
+
+    n = n1 + n2
+    if sharded:
+        n_pad = k * preprocess.bucket_length(-(-n // k))
+        # point-sharded groups keep their full slot extent per device
+        s_local = num_slots
+        rounds = (float(projections.BISECT_ROUNDS_SOLVER)
+                  if nu > 0 else 0.0)
+        model = ServeCommModel(k=k, num_slots=s_local,
+                               nu_rounds_per_iter=rounds)
+        predicted_iter = model.collective_multiset(block_size)
+        predicted_chunk = model.per_chunk_multiset(d)
+    else:
+        n_pad = preprocess.bucket_length(n)
+        if num_slots % k:
+            raise ValueError(
+                f"lanes placement needs k | num_slots, got "
+                f"{num_slots} over k={k}")
+        model = None
+        predicted_iter, predicted_chunk = {}, {}
+
+    hlo = lower_serve_chunk(k, num_slots=num_slots, n_pad=n_pad, d=d,
+                            nu=nu, block_size=block_size,
+                            chunk_steps=chunk_steps, backend=backend,
+                            sharded=sharded)
+    # the lanes placement has no collective-bearing while AT ALL -- the
+    # step-loop walk would fail to find one, which is exactly the
+    # property we pin by auditing the whole module as one flat scope
+    counts = audit_hlo(hlo, has_step_loop=sharded)
+
+    rec = {
+        "kind": "serve", "k": k, "num_slots": num_slots,
+        "n1": n1, "n2": n2, "n_pad": n_pad, "d": d, "nu": nu,
+        "block_size": block_size, "chunk_steps": chunk_steps,
+        "backend": backend, "sharded": sharded,
+        "predicted": multiset_to_json(predicted_iter),
+        "measured": multiset_to_json(counts.per_iteration),
+        "predicted_per_chunk": multiset_to_json(predicted_chunk),
+        "measured_per_chunk": multiset_to_json(counts.per_chunk),
+        "match": (counts.per_iteration == predicted_iter
+                  and counts.per_chunk == predicted_chunk),
+        "per_iteration_count": counts.per_iteration_count,
+        "per_iteration_bytes": counts.per_iteration_bytes,
+    }
+    if model is not None:
+        rec.update({
+            "model_collectives":
+                model.collectives_per_iteration(block_size),
+            "model_payload_bytes":
+                4 * model.payload_elements_per_iteration(block_size),
         })
     return rec
 

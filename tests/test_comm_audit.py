@@ -36,14 +36,50 @@ def _specs():
     # pallas-interpret backend stability at one k per nu
     for nu in (0.0, NU):
         specs.append({"k": 2, "nu": nu, **BASE, "backend": "pallas"})
+    specs += _serve_specs()
+    return specs
+
+
+SERVE_BASE = dict(n1=96, n2=112, d=32, chunk_steps=5)
+
+
+def _serve_specs():
+    """The SERVING chunk (engine.run_chunk_slots_sharded): lanes
+    placements must be collective-free, point-sharded placements must
+    match ServeCommModel -- per iteration AND per chunk."""
+    specs = []
+    for k in (2, 8):
+        for nu in (0.0, NU):
+            specs.append({"kind": "serve", "k": k, "nu": nu,
+                          "num_slots": 2 * k, "block_size": 1,
+                          "sharded": False, **SERVE_BASE})
+            specs.append({"kind": "serve", "k": k, "nu": nu,
+                          "num_slots": 2, "block_size": 4,
+                          "sharded": True, **SERVE_BASE})
+    # pallas through the sharded serve step at a real k
+    specs.append({"kind": "serve", "k": 2, "nu": NU, "num_slots": 2,
+                  "block_size": 4, "sharded": True,
+                  "backend": "pallas", **SERVE_BASE})
     return specs
 
 
 @pytest.fixture(scope="module")
-def audits():
+def all_audits():
     recs = comm_audit.collect_audits(_specs())
     assert recs, "audit subprocess returned nothing"
     return recs
+
+
+@pytest.fixture(scope="module")
+def audits(all_audits):
+    """Solver-step records only (the serve records have their own
+    shape and their own assertions below)."""
+    return [r for r in all_audits if r.get("kind") != "serve"]
+
+
+@pytest.fixture(scope="module")
+def serve_audits(all_audits):
+    return [r for r in all_audits if r.get("kind") == "serve"]
 
 
 def _find(audits, **want):
@@ -135,6 +171,53 @@ def test_production_chunk_matches_single_step(audits, nu):
         f"all-reduce|add|{BASE['d']}": 1}, rec["runner_per_chunk"]
 
 
+# ------------------------------------------------- serving chunk budget
+@pytest.mark.parametrize("k", (2, 8))
+@pytest.mark.parametrize("nu", [0.0, NU], ids=["hm", "nu"])
+def test_serve_lanes_collective_free(serve_audits, k, nu):
+    """The lane-parallel serving placement (slot axis sharded, whole
+    lanes per device) must compile with ZERO collectives ANYWHERE --
+    not just in the loop: admission, stepping and harvest of unsharded
+    slots are entirely device-local."""
+    rec = _find(serve_audits, k=k, nu=nu, sharded=False)[0]
+    assert rec["measured"] == {} and rec["measured_per_chunk"] == {}
+    assert rec["match"] is True
+    assert rec["per_iteration_count"] == 0
+    assert rec["per_iteration_bytes"] == 0
+
+
+@pytest.mark.parametrize("k", (2, 8))
+@pytest.mark.parametrize("nu", [0.0, NU], ids=["hm", "nu"])
+def test_serve_points_match_model(serve_audits, k, nu):
+    """The point-sharded serving chunk's collectives equal
+    ServeCommModel EXACTLY -- Theorem-8 launch counts per iteration
+    (payloads vmap-batched by S) plus the two chunk-boundary psums."""
+    rec = _find(serve_audits, k=k, nu=nu, sharded=True,
+                backend="jnp")[0]
+    rounds = (float(projections.BISECT_ROUNDS_SOLVER) if nu > 0
+              else 0.0)
+    model = dist.ServeCommModel(k=k, num_slots=rec["num_slots"],
+                                nu_rounds_per_iter=rounds)
+    assert rec["measured"] == comm_audit.multiset_to_json(
+        model.collective_multiset(rec["block_size"]))
+    assert rec["measured_per_chunk"] == comm_audit.multiset_to_json(
+        model.per_chunk_multiset(rec["d"]))
+    assert rec["match"] is True
+    assert rec["per_iteration_count"] == \
+        model.collectives_per_iteration(rec["block_size"])
+
+
+def test_serve_backend_stable(serve_audits):
+    """jnp and pallas backends emit the SAME serve-chunk multisets."""
+    jr = _find(serve_audits, k=2, nu=NU, sharded=True,
+               backend="jnp")[0]
+    pr = _find(serve_audits, k=2, nu=NU, sharded=True,
+               backend="pallas")[0]
+    assert jr["measured"] == pr["measured"]
+    assert jr["measured_per_chunk"] == pr["measured_per_chunk"]
+    assert pr["match"] is True
+
+
 def test_scalar_model_linear_in_k():
     """The paper-convention scalar count is exactly linear in k and
     independent of n, d (Theorem 8's O(k) per iteration)."""
@@ -174,6 +257,39 @@ def test_dryrun_saddle_dsvc_lowers(mesh):
         cwd=os.path.join(os.path.dirname(__file__), ".."),
         env=env, timeout=600)
     assert "SADDLE_DRYRUN_OK" in out.stdout, \
+        out.stdout[-2000:] + out.stderr[-4000:]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mesh", ["16x16", "2x16x16"])
+def test_dryrun_saddle_serve_lowers(mesh):
+    """launch/dryrun.py's saddle-serve entry lowers + compiles both
+    serving shapes (lane-parallel 512-slot, point-sharded 1M-point) on
+    the production meshes with the audited collectives matching the
+    model (run_one_saddle_serve raises on mismatch).  Subprocess:
+    256/512 forced host devices."""
+    import os
+    import subprocess
+    import sys
+
+    code = (
+        "import os, sys\n"
+        "os.environ['XLA_FLAGS'] = "
+        "'--xla_force_host_platform_device_count=512'\n"
+        "os.environ['JAX_PLATFORMS'] = 'cpu'\n"
+        "sys.path.insert(0, 'src')\n"
+        "from repro.launch import dryrun\n"
+        "for shape in ('serve_lanes_512', 'serve_points_1m'):\n"
+        "    rec = dryrun.run_one_saddle_serve(shape, "
+        f"multi_pod={mesh == '2x16x16'})\n"
+        "    assert rec['comm_audit']['match'] is True, rec\n"
+        "print('SERVE_DRYRUN_OK')\n")
+    env = dict(os.environ)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        env=env, timeout=600)
+    assert "SERVE_DRYRUN_OK" in out.stdout, \
         out.stdout[-2000:] + out.stderr[-4000:]
 
 

@@ -1,0 +1,330 @@
+"""Mesh-sharded serving (repro.serve.solver_service with a device
+mesh): 1-device-mesh bit-for-bit parity with the meshless service,
+point-sharded admission at k=1 and k=8, pallas through the sharded slot
+step, and the sharded-slot fault paths (quarantine/cancel isolation,
+shard-loss recovery via the renormalized-mass rule).
+
+The in-process tests use a 1-device mesh -- shard_map over one device
+must reproduce the meshless driver bit-for-bit, so every assertion here
+is exact equality, not allclose.  Multi-device coverage (a real 8-way
+point shard with live collectives) runs in subprocesses because the
+host device count must be forced before jax initializes, exactly like
+tests/test_distributed.py.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.serve.solver_service import FitRequest, SolverService
+
+pytestmark = pytest.mark.serve
+
+C = 40      # service chunk length (same as tests/test_solver_service.py)
+
+
+def _mesh1():
+    # two axes of one device each: exercises the full axis plumbing
+    # (multi-axis slot placement, tuple axis_name) with serial semantics
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def two_problems():
+    ds1 = synthetic.blobs(40, 50, 16, gap=1.2, spread=0.15, seed=0)
+    ds2 = synthetic.blobs(35, 45, 16, gap=0.8, spread=0.3, seed=2)
+    return ds1, ds2       # both land in the (128, 16) bucket
+
+
+def _drain(svc, reqs):
+    rids = [svc.submit(FitRequest(**r)) for r in reqs]
+    results = svc.run()
+    return [results[r] for r in rids]
+
+
+def _assert_bitexact(a, b):
+    assert np.array_equal(np.asarray(a.w), np.asarray(b.w))
+    assert float(a.b) == float(b.b)
+    assert float(a.objective) == float(b.objective)
+    assert a.iterations == b.iterations
+    assert a.bucket == b.bucket
+    assert np.array_equal(np.asarray(a.history, dtype=np.float64),
+                          np.asarray(b.history, dtype=np.float64))
+
+
+@pytest.mark.parametrize("nu_frac", [0.0, 0.85])
+def test_one_device_mesh_bitexact(two_problems, nu_frac):
+    """A 1-device mesh service must be indistinguishable from the
+    meshless service: same w, b, objective, history, bit for bit --
+    the regression gate for the shard_map-wrapped chunk path."""
+    ds1, ds2 = two_problems
+    reqs = [dict(x=ds1.x, y=ds1.y, num_iters=3 * C, seed=1,
+                 nu=nu_frac and 1.0 / (nu_frac * 40)),
+            dict(x=ds2.x, y=ds2.y, num_iters=2 * C, seed=9,
+                 nu=nu_frac and 1.0 / (nu_frac * 35))]
+    plain = _drain(SolverService(num_slots=4, chunk_steps=C), reqs)
+    mesh = _drain(SolverService(num_slots=4, chunk_steps=C,
+                                mesh=_mesh1()), reqs)
+    for a, b in zip(plain, mesh):
+        _assert_bitexact(a, b)
+
+
+def test_point_sharded_k1_bitexact(two_problems):
+    """shard_points_above=0 routes EVERY request into a point-sharded
+    group; with k=1 the shard bucket degenerates to the plain bucket
+    (1 * bucket_length(n) == bucket_length(n)) and the in-step
+    collectives are identity, so results must still be bit-exact."""
+    ds1, ds2 = two_problems
+    reqs = [dict(x=ds1.x, y=ds1.y, num_iters=3 * C, seed=1),
+            dict(x=ds2.x, y=ds2.y, num_iters=3 * C, seed=9,
+                 nu=1.0 / (0.85 * 35))]
+    plain = _drain(SolverService(num_slots=2, chunk_steps=C), reqs)
+    sharded = _drain(SolverService(num_slots=2, chunk_steps=C,
+                                   mesh=_mesh1(), shard_points_above=0,
+                                   shard_num_slots=2), reqs)
+    for a, b in zip(plain, sharded):
+        _assert_bitexact(a, b)
+
+
+def test_pallas_interpret_one_device_mesh_parity(two_problems):
+    """backend="pallas" through the SHARDED slot step (interpret mode
+    on CPU): the point-sharded 1-device group must match the meshless
+    pallas service bit-for-bit and the jnp mesh service numerically."""
+    ds1, _ = two_problems
+    reqs = [dict(x=ds1.x, y=ds1.y, num_iters=C, seed=3)]
+    plain = _drain(SolverService(num_slots=2, chunk_steps=C,
+                                 backend="pallas"), reqs)
+    mesh = _drain(SolverService(num_slots=2, chunk_steps=C,
+                                backend="pallas", mesh=_mesh1(),
+                                shard_points_above=0,
+                                shard_num_slots=2), reqs)
+    _assert_bitexact(plain[0], mesh[0])
+    jnp_mesh = _drain(SolverService(num_slots=2, chunk_steps=C,
+                                    mesh=_mesh1(), shard_points_above=0,
+                                    shard_num_slots=2), reqs)
+    np.testing.assert_allclose(mesh[0].w, jnp_mesh[0].w, atol=1e-5)
+    np.testing.assert_allclose(mesh[0].objective, jnp_mesh[0].objective,
+                               atol=1e-5)
+
+
+def _run_subprocess(code, timeout=600):
+    env = dict(os.environ)
+    # pin the subprocess to CPU: --xla_force_host_platform_device_count
+    # only applies there, and a libtpu build would probe TPU metadata
+    # for minutes before falling back (see tests/test_distributed.py)
+    env["JAX_PLATFORMS"] = "cpu"
+    return subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."), env=env,
+        timeout=timeout)
+
+
+_COMMON_PREAMBLE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax
+import numpy as np
+from repro.data import synthetic
+from repro.serve.solver_service import FitRequest, SolverService
+
+C = 40
+mesh = jax.make_mesh((8,), ("data",))
+ds1 = synthetic.blobs(40, 50, 16, gap=1.2, spread=0.15, seed=0)
+ds2 = synthetic.blobs(35, 45, 16, gap=0.8, spread=0.3, seed=2)
+big = synthetic.blobs(300, 280, 16, gap=1.0, spread=0.25, seed=5)
+NU_BIG = 1.0 / (0.8 * 300)
+
+def drain(svc, reqs):
+    rids = [svc.submit(FitRequest(**r)) for r in reqs]
+    results = svc.run()
+    return rids, [results[r] for r in rids]
+"""
+
+
+def test_mesh_service_multidevice_parity():
+    """Production path on a real 8-device host mesh: lane-parallel
+    groups match the meshless service, a point-sharded large-n fit
+    (live Theorem-8 collectives) matches a solo solve at the same
+    bucket."""
+    code = _COMMON_PREAMBLE + r"""
+from repro.core import preprocess as pp
+from repro.core import saddle
+from repro.core.svm import recover_hyperplane, split_classes
+
+# ---- lane-parallel parity: S=8 over 8 devices (1 whole lane each).
+# Not bit-exact vs meshless: the chunk body is traced at the 1-slot
+# per-device extent, so XLA fuses differently (reassociation-level
+# noise only; bit-exactness is pinned by the 1-device-mesh tests).
+reqs = [dict(x=ds1.x, y=ds1.y, num_iters=3 * C, seed=1),
+        dict(x=ds2.x, y=ds2.y, num_iters=3 * C, seed=9,
+             nu=1.0 / (0.85 * 35))]
+_, plain = drain(SolverService(num_slots=8, chunk_steps=C), reqs)
+_, lanes = drain(SolverService(num_slots=8, chunk_steps=C, mesh=mesh),
+                 reqs)
+for a, b in zip(plain, lanes):
+    assert np.allclose(a.w, b.w, atol=1e-6), \
+        np.abs(np.asarray(a.w) - np.asarray(b.w)).max()
+    assert abs(float(a.objective) - float(b.objective)) < 1e-6
+print("LANES_PARITY_OK")
+
+# ---- point-sharded fit: k=8 shard bucket happens to equal the plain
+# bucket at n=580 (8 * bucket_length(73) == bucket_length(580) == 1024),
+# so a solo solve at the same bucket replays the same block schedule;
+# only collective reassociation separates the trajectories.
+svc = SolverService(num_slots=8, chunk_steps=C, mesh=mesh,
+                    shard_points_above=256, shard_num_slots=2)
+_, (res_big,) = drain(svc, [dict(x=big.x, y=big.y, num_iters=3 * C,
+                                 seed=5, nu=NU_BIG)])
+assert res_big.bucket[0] == 8 * pp.bucket_length(-(-580 // 8))
+
+xp, xm = split_classes(big.x, big.y)
+k_pre, _ = jax.random.split(jax.random.key(5))
+pre = pp.preprocess(xp, xm, k_pre)
+n_b, d_b = res_big.bucket
+ser = saddle.solve(pre.xp, pre.xm, nu=NU_BIG, num_iters=3 * C,
+                   record_every=C, seed=5, n_pad=n_b, d_pad=d_b)
+eta = np.exp(np.asarray(ser.state.log_eta))
+xi = np.exp(np.asarray(ser.state.log_xi))
+w_ref, b_ref, *_ = recover_hyperplane(pre, eta, xi, pre.xp, pre.xm)
+assert np.allclose(res_big.w, w_ref, atol=1e-4), \
+    np.abs(np.asarray(res_big.w) - w_ref).max()
+assert np.allclose(res_big.b, b_ref, atol=1e-4)
+print("POINTS_PARITY_OK")
+"""
+    out = _run_subprocess(code)
+    assert "LANES_PARITY_OK" in out.stdout, out.stdout + out.stderr
+    assert "POINTS_PARITY_OK" in out.stdout, out.stdout + out.stderr
+
+
+@pytest.mark.faults
+def test_sharded_slot_fault_paths():
+    """Fault paths of POINT-SHARDED slots on a real 8-device mesh:
+    poison -> structured FAILED and cancel both leave the unsharded
+    batch-mates bit-identical to a run that never saw the sharded
+    request; losing one shard of a running slot follows the
+    renormalized-mass recovery rule of core.distributed
+    (tests/test_distributed.py), with the co-resident slot untouched."""
+    code = _COMMON_PREAMBLE + r"""
+import jax.numpy as jnp
+from repro.core import distributed as dist
+from repro.core import engine
+from repro.core import preprocess as pp
+from repro.core import saddle
+from repro.core.svm import split_classes
+from repro.serve.faults import Fault, FaultInjector, FaultPlan
+from repro.serve.scheduler import RequestFailure, Status
+
+LANE_REQS = [dict(x=ds1.x, y=ds1.y, num_iters=3 * C, seed=1),
+             dict(x=ds2.x, y=ds2.y, num_iters=3 * C, seed=9,
+                  nu=1.0 / (0.85 * 35))]
+BIG_REQ = dict(x=big.x, y=big.y, num_iters=3 * C, seed=5, nu=NU_BIG)
+
+def mesh_svc(injector=None):
+    return SolverService(num_slots=8, chunk_steps=C, mesh=mesh,
+                         shard_points_above=256, shard_num_slots=2,
+                         fault_injector=injector)
+
+# baseline: lanes only, no sharded request ever admitted
+_, base = drain(mesh_svc(), LANE_REQS)
+
+# ---- poison the sharded slot at chunk 1 (rids are sequential: the
+# big request is rid 2) -> quarantine -> FAILED at max_retries=0
+plan = FaultPlan(seed=0, faults=(Fault("poison", rid=2, at_chunk=1),))
+svc = mesh_svc(FaultInjector(plan))
+rids, res = drain(svc, LANE_REQS + [BIG_REQ])
+assert rids[2] == 2
+assert isinstance(res[2], RequestFailure)
+assert res[2].status is Status.FAILED
+for a, b in zip(base, res[:2]):
+    assert np.array_equal(np.asarray(a.w), np.asarray(b.w))
+    assert float(a.objective) == float(b.objective)
+print("POISON_ISOLATION_OK")
+
+# ---- cancel the sharded request mid-run
+svc = mesh_svc()
+r_lanes = [svc.submit(FitRequest(**r)) for r in LANE_REQS]
+r_big = svc.submit(FitRequest(**BIG_REQ))
+svc.step()                       # one chunk: everything is running
+assert svc.cancel(r_big)
+assert svc.status(r_big) is Status.CANCELLED
+results = svc.run()
+failure = results[r_big]
+assert isinstance(failure, RequestFailure)
+assert failure.status is Status.CANCELLED
+for a, rid in zip(base, r_lanes):
+    assert np.array_equal(np.asarray(a.w), np.asarray(results[rid].w))
+print("CANCEL_ISOLATION_OK")
+
+# ---- shard loss: drop one of 8 shards of a RUNNING sharded slot.
+# Engine-level replay of tests/test_distributed.py's drop_client
+# semantics on the serving layout: dropped columns carry exactly zero
+# dual mass forever, the next MWU normalizer round rescales each
+# class's surviving mass back to 1, and the co-resident slot is
+# bit-identical to a run without the drop.  Hard margin: the sum-to-1
+# normalizer IS the repair (a nu cap can be left infeasible by a drop
+# -- surviving support below 1/nu pins the class mass at nu*support).
+xp, xm = split_classes(big.x, big.y)
+pre = pp.preprocess(xp, xm, jax.random.key(7))
+n1, n2 = len(xp), len(xm)
+k = 8
+n_pad = k * pp.bucket_length(-(-(n1 + n2) // k))
+d = pre.xp.shape[1]
+pkd = pp.pack_points_to(pre.xp, pre.xm, n_pad, d)
+p = saddle.make_params(n1 + n2, d, eps=1e-3, beta=0.1, nu=0.0,
+                       block_size=1)
+row = engine.slot_params_row(p)
+S = 2
+sp = engine.SlotParams(*(jnp.full((S,), v) for v in row))
+
+def run_chunks(num, state, x_t, sign):
+    for _ in range(num):
+        state, obj, healthy = engine.run_chunk_slots_sharded(
+            state, x_t, sign, sp, C, mesh=mesh, slot_axes=(),
+            point_axes=("data",), chunk_steps=C, d=d, block_size=1,
+            project=False)
+    return state, obj, healthy
+
+def fresh():
+    st = engine.init_slot_state(S, n_pad, d)
+    for slot in range(S):
+        ps = engine.init_packed_state(pkd.sign, n1, n2, d)
+        _, k_run = jax.random.split(jax.random.key(20 + slot))
+        st = engine.admit_into_slot(st, jnp.int32(slot), ps, k_run,
+                                    10**6)
+    x_t = jnp.stack([pkd.x_t] * S)
+    sign = jnp.stack([pkd.sign] * S)
+    return st, x_t, sign
+
+# with the drop: 1 warm chunk, lose shard 2 of slot 1, 2 more chunks
+st, x_t, sign = fresh()
+st, _, _ = run_chunks(1, st, x_t, sign)
+st, sign = dist.drop_slot_shard(st, sign, jnp.int32(1), jnp.int32(2),
+                                num_shards=k)
+st, obj, healthy = run_chunks(2, st, x_t, sign)
+lam = np.exp(np.asarray(st.log_lam))
+sgn = np.asarray(sign)
+m = n_pad // k
+assert lam[1, 2 * m:3 * m].sum() == 0.0          # lost shard: zero mass
+np.testing.assert_allclose(lam[1][sgn[1] > 0].sum(), 1.0, rtol=1e-5)
+np.testing.assert_allclose(lam[1][sgn[1] < 0].sum(), 1.0, rtol=1e-5)
+assert bool(healthy[1]) and np.isfinite(float(obj[1]))
+
+# without the drop: slot 0 must be bit-identical either way
+st0, x_t0, sign0 = fresh()
+st0, _, _ = run_chunks(3, st0, x_t0, sign0)
+assert np.array_equal(np.asarray(st.w[0]), np.asarray(st0.w[0]))
+assert np.array_equal(np.asarray(st.log_lam[0]),
+                      np.asarray(st0.log_lam[0]))
+print("SHARD_DROP_OK")
+"""
+    out = _run_subprocess(code)
+    for sentinel in ("POISON_ISOLATION_OK", "CANCEL_ISOLATION_OK",
+                     "SHARD_DROP_OK"):
+        assert sentinel in out.stdout, out.stdout + out.stderr
