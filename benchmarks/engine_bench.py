@@ -53,6 +53,12 @@ from repro.utils import roofline
 # >= this factor warm at the nu>0 block shapes.
 DRIVER_GAP_FLOOR = 1.5
 
+# The two drivers draw different coordinate-key schedules, so their
+# final objectives differ by genuine stochastic drift (~0.5 at the
+# quick shape's short budgets); the tolerance only guards against a
+# diverged run, not bit-parity.
+DRIFT_TOL = 1.0
+
 
 @functools.partial(jax.jit, static_argnames=("params", "num_steps"))
 def _legacy_chunk(state, key, xp, xm, params, num_steps: int):
@@ -191,10 +197,16 @@ def _driver_comparison(n: int, d: int, B: int, nu_frac: float,
                f"fused_over_seed;{shape};floor={DRIVER_GAP_FLOOR}x")
 
     # sanity: both drivers converge toward the same optimum (their key
-    # schedules differ, so stochastic drift is expected)
+    # schedules differ, so stochastic drift is expected).  The drift is
+    # a DIMENSIONLESS objective gap -- it must go through emit_count,
+    # never emit(), which would relabel it as microseconds.
     drift = abs(hist_l[-1][1] - res.history[-1][1])
-    emit("engine/final_obj_drift", drift,
-         f"legacy={hist_l[-1][1]:.6f};fused={res.history[-1][1]:.6f}")
+    emit_count("engine/final_obj_drift", round(drift, 6),
+               f"legacy={hist_l[-1][1]:.6f};fused={res.history[-1][1]:.6f};"
+               f"tol={DRIFT_TOL};objective_gap_dimensionless")
+    if drift > DRIFT_TOL:
+        print(f"# WARNING: legacy-vs-fused final objective drift "
+              f"{drift:.4f} exceeds tol {DRIFT_TOL} ({shape})")
 
     if gap_ratio < DRIVER_GAP_FLOOR:
         msg = (f"end-to-end driver gap {gap_ratio:.2f}x < "

@@ -42,6 +42,12 @@ PROMPT_LENS = (5, 7, 12, 6, 11, 7)   # buckets 8 and 16 only
 MAX_LEN = 48
 CHUNK = 8
 
+# S=1 runs every request through the slot driver's admission/refill
+# machinery with no batch-mates to amortize it, so it ships slightly
+# BELOW sequential (~0.8x).  The floor only guards against that
+# overhead growing into a real regression.
+SLOTS1_FLOOR = 0.7
+
 
 def _setup():
     cfg = get_config(ARCH).reduced()
@@ -112,9 +118,12 @@ def run(quick: bool = True) -> None:
     emit("lm_serve/sequential_generate_loop", t_seq / toks,
          f"arch={ARCH};steps={STEPS};R={R};tps={toks / t_seq:.1f}")
     for s in slots:
-        emit(f"lm_serve/slots{s}", best[s] / toks,
-             f"tps={toks / best[s]:.1f};"
-             f"speedup={t_seq / best[s]:.2f}x;cache_hits=100%")
+        note = (f"tps={toks / best[s]:.1f};"
+                f"speedup={t_seq / best[s]:.2f}x;cache_hits=100%")
+        if s == 1:
+            # expected < 1x: slot-driver overhead, nothing to batch
+            note += f";s1_overhead_expected;floor={SLOTS1_FLOOR}"
+        emit(f"lm_serve/slots{s}", best[s] / toks, note)
         emit(f"lm_serve/slots{s}/latency_p50", lat[s][50.0],
              "queue_to_result")
         emit(f"lm_serve/slots{s}/latency_p95", lat[s][95.0],
@@ -125,6 +134,14 @@ def run(quick: bool = True) -> None:
         # wall-clock ratios are load sensitive; quick/ci smoke warns
         msg = (f"S={max(slots)} LM serving speedup {speedup:.2f}x < 1.0x "
                f"(continuous batching should never lose to sequential)")
+        if not quick:
+            raise AssertionError(msg)
+        print(f"# WARNING: {msg}")
+    ratio1 = t_seq / best[1]
+    if ratio1 < SLOTS1_FLOOR:
+        msg = (f"S=1 LM serving at {ratio1:.2f}x sequential, floor "
+               f"{SLOTS1_FLOOR}x (slot-driver overhead without "
+               f"batch-mates is expected ~0.8x, not worse)")
         if not quick:
             raise AssertionError(msg)
         print(f"# WARNING: {msg}")

@@ -37,6 +37,19 @@ sharding, and a point-sharded big fit (points spanning the mesh's data
 axis inside the slot driver) is timed alongside with its per-chunk
 collective budget from ServeCommModel.  Emitted as ``serve/sharded/*``.
 
+Streaming mode (always on): ST_TENANTS live (``stream=True``) tenants
+each take ST_ROUNDS of appended points (2+2 per round -- the regime
+warm starts exist for; the per-tenant point count crosses the 128-rung
+boundary exactly and then JUMPS to the 256 rung in the last round),
+re-fit warm (carry w + re-placed duals from the previous solution) vs
+cold (same edits, fresh state), both under the same duality-gap stop.
+``serve/stream/warm_iters_ratio`` = total warm update iterations over
+cold -- the tentpole's sublinear-re-fit claim as a tracked number --
+with a <= 0.7x floor (warn in quick mode, FAIL in full), plus
+requests/sec for both passes.  ZERO recompiles across update rounds
+(in-bucket re-packs AND the rung jump) is asserted HARD in both modes
+via the same trace_counts snapshot discipline as above.
+
 Chaos mode (always on): a seed-keyed fault plan
 (repro.serve.faults.FaultPlan) poisons a fixed subset of the requests
 mid-run and delays others' submissions; the pass asserts (hard) that
@@ -64,7 +77,8 @@ from repro.core.svm import SaddleSVC
 from repro.data import synthetic
 from repro.serve import faults as faults_mod
 from repro.serve.scheduler import RequestFailure
-from repro.serve.solver_service import FitRequest, SolverService
+from repro.serve.solver_service import (FitRequest, SolverService,
+                                        UpdateRequest)
 
 R = 8            # requests per trial
 N1 = N2 = 100    # points per class  -> (256, 32) bucket
@@ -251,8 +265,100 @@ def run(quick: bool = True) -> None:
     emit_count("serve/chaos/goodput_ratio", round(ratio, 3),
                f"floor={GOODPUT_FLOOR};hard_assert")
 
+    # ---- streaming mode: warm-start update rounds vs cold re-fits ----
+    _streaming_pass(quick)
+
     # ---- sharded mode: mesh service in a forced-8-device subprocess --
     _sharded_pass(quick)
+
+
+# -------------------------------------------------------- streaming pass
+ST_TENANTS = 4
+ST_ROUNDS = 3          # appends of 2+2/round walk each tenant's point
+ST_N1 = ST_N2 = 60     # count 120 -> 124 -> 128 (exact boundary, same
+ST_D = 16              # rung) -> 132: a JUMP to the 256 rung in the
+ST_APPEND = 2          # last round -- both re-pack paths are timed
+ST_ITERS = 40960       # budget; the gap stop ends every solve early
+ST_GAP = 0.05
+ST_CHUNK = 256
+WARM_ITERS_FLOOR = 0.7   # warm updates must need <= 0.7x the cold
+                         # iterations-to-gap (measures ~0.14x)
+
+
+def _stream_data():
+    tenants = [synthetic.blobs(ST_N1, ST_N2, ST_D, gap=1.2, spread=0.15,
+                               seed=i) for i in range(ST_TENANTS)]
+    rounds = [[synthetic.blobs(ST_APPEND, ST_APPEND, ST_D, gap=1.2,
+                               spread=0.15, seed=1000 + 10 * r + i)
+               for i in range(ST_TENANTS)]
+              for r in range(ST_ROUNDS)]
+    return tenants, rounds
+
+
+def _stream_trial(tenants, rounds, warm: bool):
+    """One streaming trial: live fits, then per-tenant append rounds
+    re-fit warm or cold.  Returns (wall, total update iterations,
+    svc)."""
+    svc = SolverService(num_slots=ST_TENANTS, chunk_steps=ST_CHUNK)
+    t0 = time.perf_counter()
+    rids = [svc.submit(FitRequest(x=ds.x, y=ds.y, seed=i,
+                                  num_iters=ST_ITERS, gap_tol=ST_GAP,
+                                  stream=True))
+            for i, ds in enumerate(tenants)]
+    svc.run()
+    iters = 0
+    for rnd in rounds:
+        upd = [svc.submit_update(UpdateRequest(tenant=rid, x=ex.x,
+                                               y=ex.y, warm=warm))
+               for rid, ex in zip(rids, rnd)]
+        res = svc.run()
+        for u in upd:
+            r = res[u]
+            assert not isinstance(r, RequestFailure), r
+            assert r.iterations < ST_ITERS, \
+                "gap stop never fired; iterations-to-gap is meaningless"
+            iters += r.iterations
+    return time.perf_counter() - t0, iters, svc
+
+
+def _streaming_pass(quick: bool) -> None:
+    tenants, rounds = _stream_data()
+    # warm-up traces BOTH rung executables (128 pre-jump, 256 post)
+    # and the warm-admission staging helpers for either mode
+    _stream_trial(tenants, rounds, True)
+    _stream_trial(tenants, rounds, False)
+    snap = dict(engine.trace_counts)
+    t_warm, it_warm, svc_w = _stream_trial(tenants, rounds, True)
+    t_cold, it_cold, svc_c = _stream_trial(tenants, rounds, False)
+    # the zero-recompile contract ACROSS update rounds, rung jump
+    # included, asserted hard in quick and full mode alike
+    for svc in (svc_w, svc_c):
+        assert svc.stats["compiles"] == 0, svc.stats
+    delta = {k: v - snap.get(k, 0) for k, v in engine.trace_counts.items()
+             if v != snap.get(k, 0)}
+    assert delta == {}, f"recompile across streaming updates: {delta}"
+
+    n_req = ST_TENANTS * (1 + ST_ROUNDS)
+    shape = (f"tenants={ST_TENANTS};rounds={ST_ROUNDS};"
+             f"n0={ST_N1 + ST_N2};append={2 * ST_APPEND}/round;"
+             f"gap_tol={ST_GAP}")
+    emit("serve/stream/warm_pass", t_warm / n_req,
+         f"rps={n_req / t_warm:.1f};update_iters={it_warm};{shape}")
+    emit("serve/stream/cold_pass", t_cold / n_req,
+         f"rps={n_req / t_cold:.1f};update_iters={it_cold};{shape}")
+    ratio = it_warm / it_cold
+    emit_count("serve/stream/warm_iters_ratio", round(ratio, 4),
+               f"warm={it_warm};cold={it_cold};"
+               f"floor<={WARM_ITERS_FLOOR};incl_rung_jump_128_to_256")
+    emit_count("serve/stream/recompiles_across_updates", 0,
+               "asserted_zero;incl_rung_jump")
+    if ratio > WARM_ITERS_FLOOR:
+        msg = (f"warm-start update rounds took {ratio:.2f}x the cold "
+               f"iterations-to-gap, floor {WARM_ITERS_FLOOR}x "
+               f"(typically ~0.14x at 2+2-point appends)")
+        if not quick:
+            raise AssertionError(msg)
+        print(f"# WARNING: {msg}")
 
 
 # ---------------------------------------------------------- sharded pass

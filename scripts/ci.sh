@@ -69,6 +69,17 @@ case "$tier" in
     # (run.py exits 1 on a suite AssertionError).
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
       python -m benchmarks.run --only engine --full --json BENCH_engine.json
+    # serving gate (enforcing): the same serve bench as the fast tier
+    # but with the floors promoted from warnings to failures -- the
+    # S=8 speedup/sharding floors, the chaos goodput floor, and the
+    # streaming warm-start floor (warm update iterations <= 0.7x cold,
+    # rung jump included).
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+      python -m benchmarks.run --only serve --full --json BENCH_serve.json
+    # LM serving gate (enforcing): S=4 speedup >= 1x and the S=1
+    # slot-driver-overhead floor (>= 0.7x sequential) fail here.
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+      python -m benchmarks.run --only lm_serve --full --json BENCH_lm_serve.json
     ;;
   *)    echo "usage: scripts/ci.sh [fast|full] [pytest args...]" >&2
         exit 2 ;;

@@ -291,6 +291,20 @@ def _build_run_solve_slots() -> str:
         check_gap=True).compile().as_text()
 
 
+def _build_warm_packed_state() -> str:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import engine
+
+    n_pad, d = 256, 32
+    return engine.warm_packed_state.lower(
+        jax.ShapeDtypeStruct((d, n_pad), jnp.float32),
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+        jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        jax.ShapeDtypeStruct((n_pad,), jnp.float32)).compile().as_text()
+
+
 def _build_sharded_runner(k: int = 8) -> str:
     import jax
 
@@ -393,10 +407,11 @@ def _serve_comm_model(k: int, num_slots: int, nu: float):
 def default_targets() -> list[LintTarget]:
     """The hot paths linted on every gate run.  Expected counts:
     PackedState has 5 leaves, SlotState 8, the sharded runner donates
-    the 5-leaf replicated-state pytree; the decode chunk is a static
-    ``scan`` (zero dynamic whiles), the solver chunks one dynamic
-    num_steps fori_loop (the whole-solve driver adds the outer chunk
-    while, so 2); 24 = projections.BISECT_ROUNDS_SOLVER."""
+    the 5-leaf replicated-state pytree, the warm-start admission step
+    donates its 3 carried leaves (w + both dual copies); the decode
+    chunk is a static ``scan`` (zero dynamic whiles), the solver chunks
+    one dynamic num_steps fori_loop (the whole-solve driver adds the
+    outer chunk while, so 2); 24 = projections.BISECT_ROUNDS_SOLVER."""
     from repro.core import projections
 
     rounds = int(projections.BISECT_ROUNDS_SOLVER)
@@ -416,6 +431,13 @@ def default_targets() -> list[LintTarget]:
         LintTarget("engine.run_solve_slots", _build_run_solve_slots,
                    min_donated=8, comm="serial",
                    static_trips=(rounds,), max_dynamic_whiles=2),
+        # the streaming warm-start admission step: w + both dual leaves
+        # donated (3) so re-admitting a live tenant allocates nothing
+        # new, no loops at all, and -- being host-free -- the re-pack
+        # never bounces state through the host between update rounds.
+        LintTarget("engine.warm_packed_state", _build_warm_packed_state,
+                   min_donated=3, comm="serial",
+                   static_trips=(), max_dynamic_whiles=0),
         LintTarget("distributed.sharded_run_fn[k=8]",
                    lambda: _build_sharded_runner(8),
                    min_donated=5,

@@ -333,6 +333,33 @@ def init_packed_state(sign: jax.Array, n1: int, n2: int,
     )
 
 
+@functools.partial(jax.jit, donate_argnums=(1, 2, 3))
+def warm_packed_state(x_t: jax.Array, w: jax.Array, log_lam: jax.Array,
+                      log_lam_prev: jax.Array) -> PackedState:
+    """WARM-START packed state from a previous solution: carry ``w``
+    and the (re-placed, see ``preprocess.repack_warm_duals``) log duals
+    plus their momentum copy, and recompute ``u = x_t^T w`` ON DEVICE
+    so the incremental invariant ``u_i == <w, x_i>`` holds EXACTLY for
+    every point -- carried, appended and padding alike (recomputing IS
+    carrying u: it is the unique value consistent with the carried w
+    over the new operand, with zero accumulated drift).
+
+    ``t`` resets to 0: the warm run's iteration counter counts the
+    UPDATE round's own work, which is what iterations-to-gap accounting
+    (``serve/stream/warm_iters_ratio``) compares against a cold solve.
+
+    The state leaves are donated (the caller hands over freshly staged
+    buffers); ``x_t`` is not -- it is the batch operand the chunk
+    executable keeps reading.  This helper is jitted OUTSIDE the
+    ``trace_counts`` accounting, like ``admit_into_slot``: warm
+    admission must not perturb the zero-recompile contract of the hot
+    chunk executables.
+    """
+    return PackedState(
+        w=w, log_lam=log_lam, log_lam_prev=log_lam_prev,
+        u=w @ x_t, t=jnp.zeros((), jnp.int32))
+
+
 def unpack_state(pstate: PackedState, n1: int, n2: int, cls):
     """Slice a packed state back into the per-class 8-field view
     (``cls`` is SaddleState or ShardedState -- same field names; the

@@ -17,6 +17,7 @@ zero-padded (see DESIGN.md assumption log #3).
 from __future__ import annotations
 
 import functools
+import math
 from typing import NamedTuple
 
 import jax
@@ -220,6 +221,65 @@ def preprocess(xp: np.ndarray | jax.Array, xm: np.ndarray | jax.Array,
     signs = jax.random.rademacher(key, (d_pad,), dtype=jnp.float32)
     txp, txm, scale = _transform(xp, xm, signs, d_pad)
     return Preprocessed(xp=txp, xm=txm, signs=signs, scale=scale, d_orig=d)
+
+
+def transform_like(pre: Preprocessed, x: np.ndarray | jax.Array) -> jax.Array:
+    """Apply a tenant's FIXED preprocessing transform to NEW raw points.
+
+    Streaming updates must keep the transform (the +-1 diagonal ``D``
+    and the unit-ball scale) of the tenant's ORIGINAL :func:`preprocess`
+    call: carried saddle state lives in the transformed space, so
+    re-deriving either one would silently re-base the warm start.  The
+    scale therefore stays pinned even if an arriving point's norm
+    exceeds the original max -- the unit-ball guarantee (footnote 3)
+    degrades gracefully for such points while optima are still exact
+    (the map stays a fixed orthonormal transform times a constant).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim != 2 or x.shape[1] != pre.d_orig:
+        raise ValueError(
+            f"transform_like expects (m, d_orig={pre.d_orig}) points; "
+            f"got shape {tuple(x.shape)}")
+    d_pad = pre.signs.shape[0]
+    x = jnp.pad(x, ((0, 0), (0, d_pad - x.shape[1])))
+    return hadamard_transform(x * pre.scale, pre.signs)
+
+
+def repack_warm_duals(log_lam: np.ndarray, n1_old: int, n2_old: int,
+                      n1_new: int, n2_new: int,
+                      n_pad_new: int) -> np.ndarray:
+    """Transfer packed per-class log dual mass across bucket shapes.
+
+    The packed layout is ``[eta (n1) | xi (n2) | NEG_INF pad]``, so
+    appending points to either class SHIFTS the other class's block:
+    a warm start cannot just zero-pad the old vector, it must re-place
+    each class segment at its new offset.  Carried entries keep their
+    old log weights; new points are seeded at the NEW uniform level
+    (``-log(n_class_new)``).  The carried segment still sums to the OLD
+    class's total mass, so the class sum is temporarily != 1 -- by
+    design: the next MWU round's per-class logsumexp renormalizes each
+    class to exactly 1 (normalization IS the repair, the same rule the
+    sharded paths use for dropped shards), so no host-side repair pass
+    and no extra executable is needed.
+
+    ``n1_old = n2_old = 0`` ignores ``log_lam`` entirely and yields the
+    pure uniform init on the new shape (the replace-mode dual reset).
+    """
+    from repro.core.engine import NEG_INF  # engine never imports us back
+    if not (0 <= n1_old <= n1_new and 0 <= n2_old <= n2_new):
+        raise ValueError(
+            f"warm dual transfer needs old class sizes within new ones; "
+            f"got ({n1_old}, {n2_old}) -> ({n1_new}, {n2_new})")
+    if n1_new + n2_new > n_pad_new:
+        raise ValueError(
+            f"n1_new+n2_new={n1_new + n2_new} > n_pad_new={n_pad_new}")
+    lam = np.asarray(log_lam, np.float32)
+    out = np.full((n_pad_new,), NEG_INF, np.float32)
+    out[:n1_old] = lam[:n1_old]
+    out[n1_old:n1_new] = -math.log(n1_new)
+    out[n1_new:n1_new + n2_old] = lam[n1_old:n1_old + n2_old]
+    out[n1_new + n2_old:n1_new + n2_new] = -math.log(n2_new)
+    return out
 
 
 def recover_direction(w: jax.Array, pre: Preprocessed) -> jax.Array:

@@ -241,7 +241,8 @@ def solve(xp: jax.Array, xm: jax.Array, *, eps: float = 1e-3,
           record_every: int | None = None,
           use_kernels: bool = False, n_pad: int | None = None,
           d_pad: int | None = None, gap_tol: float = 0.0,
-          driver: str = "device") -> SolveResult:
+          driver: str = "device",
+          warm_start: SaddleState | None = None) -> SolveResult:
     """Run Saddle-SVC on (already preprocessed) data.
 
     Args:
@@ -269,6 +270,18 @@ def solve(xp: jax.Array, xm: jax.Array, *, eps: float = 1e-3,
         launch per chunk; with gap_tol > 0, a blocking active-mask
         readback per boundary), retained for the transition as the
         bit-for-bit parity oracle of the device driver.
+      warm_start: a previous :class:`SaddleState` (typically a prior
+        fit of a PREFIX of this problem: its classes must be leading
+        subsets of the new ones, in order).  The solve then starts from
+        the carried ``w``, duals and momentum instead of the uniform
+        init: new points' dual mass is seeded at the new uniform level
+        and the next MWU normalizer round renormalizes each class
+        (``preprocess.repack_warm_duals``), ``u`` is recomputed on
+        device from the carried w (``engine.warm_packed_state``), and
+        ``t`` restarts at 0 so the result's history counts the warm
+        run's own iterations.  The trace keys of the hot chunk
+        executables are UNCHANGED -- warm and cold solves at the same
+        bucket share one compiled chunk.
 
     The hot loop is the SLOT-BATCHED engine driver at S=1 (one engine
     serves the serial solver and the multi-tenant service; the unpacked
@@ -295,10 +308,24 @@ def solve(xp: jax.Array, xm: jax.Array, *, eps: float = 1e-3,
     backend = "pallas" if use_kernels else "jnp"
 
     pts = pp.pack_points_to(xp, xm, n_pad or pp.packed_length(n1 + n2), d)
+    if warm_start is None:
+        pstate = engine.init_packed_state(pts.sign, n1, n2, d)
+    else:
+        n1_w = warm_start.log_eta.shape[0]
+        n2_w = warm_start.log_xi.shape[0]
+        lam_old = np.concatenate([np.asarray(warm_start.log_eta),
+                                  np.asarray(warm_start.log_xi)])
+        prev_old = np.concatenate([np.asarray(warm_start.log_eta_prev),
+                                   np.asarray(warm_start.log_xi_prev)])
+        lam = pp.repack_warm_duals(lam_old, n1_w, n2_w, n1, n2, pts.n_pad)
+        prev = pp.repack_warm_duals(prev_old, n1_w, n2_w, n1, n2, pts.n_pad)
+        w = np.zeros((d,), np.float32)
+        w[: warm_start.w.shape[0]] = np.asarray(warm_start.w)
+        pstate = engine.warm_packed_state(
+            pts.x_t, jnp.asarray(w), jnp.asarray(lam), jnp.asarray(prev))
     sstate = engine.init_slot_state(1, pts.n_pad, d)
     sstate = engine.admit_into_slot(
-        sstate, 0, engine.init_packed_state(pts.sign, n1, n2, d),
-        jax.random.key(seed), num_iters)
+        sstate, 0, pstate, jax.random.key(seed), num_iters)
     sp = jax.tree.map(lambda v: jnp.asarray(v)[None],
                       engine.slot_params_row(params, gap_tol))
     x_t_b, sign_b = pts.x_t[None], pts.sign[None]

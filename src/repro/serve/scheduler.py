@@ -78,10 +78,11 @@ Every ticket carries a :class:`Status`::
     PENDING -----------------> RUNNING ----------------> DONE
        |  \\                      |  \\
        |   `-> CANCELLED          |   `-> CANCELLED   (cancel(rid))
-       `-----> DEADLINE_EXCEEDED  `-----> FAILED      (quarantine)
-                (shed_expired)        \\
-                                       `-> PENDING    (resubmit, bounded
-                                                       retry budget)
+       |-----> DEADLINE_EXCEEDED  |-----> FAILED      (quarantine)
+       |        (shed_expired)    |   \\
+       `-----> SUPERSEDED         |    `-> PENDING    (resubmit, bounded
+                                  |                    retry budget)
+                                  `-----> SUPERSEDED  (streaming update)
 
 ``submit`` creates PENDING tickets; ``admit`` marks them RUNNING;
 ``release`` stamps the terminal status (DONE / FAILED / CANCELLED) and
@@ -90,7 +91,12 @@ whose deadline has passed (opt-in: services only shed when constructed
 with a ``clock``), ``cancel_queued`` removes a queued ticket eagerly,
 and ``resubmit`` re-enqueues a quarantined ticket with a FRESH arrival
 counter -- the retry queues behind everything already waiting, which
-is the backoff ordering.  Terminal statuses never transition again.
+is the backoff ordering.  SUPERSEDED is the streaming-update outcome:
+a newer revision of the same tenant's problem arrived, so the stale
+fit's answer is no longer wanted -- the solver service cancels the old
+request (queued or running) with this status when it accepts an
+``UpdateRequest`` for the tenant.  Terminal statuses never transition
+again.
 """
 
 from __future__ import annotations
@@ -116,6 +122,9 @@ class Status(enum.Enum):
     FAILED = "FAILED"                        # quarantined / rejected
     CANCELLED = "CANCELLED"                  # cancel(rid) honored
     DEADLINE_EXCEEDED = "DEADLINE_EXCEEDED"  # shed before admission
+    SUPERSEDED = "SUPERSEDED"                # replaced by a newer
+                                             # revision of its tenant's
+                                             # streaming problem
 
     @property
     def terminal(self) -> bool:
@@ -451,15 +460,18 @@ class Scheduler:
                 shed.append((g, t))
         return shed
 
-    def cancel_queued(self, rid: int) -> tuple[Group, Ticket] | None:
+    def cancel_queued(self, rid: int,
+                      status: Status = Status.CANCELLED
+                      ) -> tuple[Group, Ticket] | None:
         """Remove a still-queued ticket from whichever group holds it,
-        stamping CANCELLED.  None if no group has it queued (it may be
-        running -- the workload cancels those between chunks via
-        :meth:`release`)."""
+        stamping ``status`` (CANCELLED by default; the solver service
+        passes SUPERSEDED when a streaming update replaces a queued
+        fit).  None if no group has it queued (it may be running -- the
+        workload cancels those between chunks via :meth:`release`)."""
         for g in self.groups:
             t = g.remove_queued(rid)
             if t is not None:
-                t.status = Status.CANCELLED
+                t.status = status
                 return g, t
         return None
 

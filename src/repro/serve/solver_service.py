@@ -39,6 +39,30 @@ scheduler group key -- see :meth:`repro.serve.scheduler.Scheduler.
 group` -- and a 1-device mesh reproduces the meshless service
 bit-for-bit (tested in ``tests/test_mesh_service.py``).
 
+Streaming updates (warm starts)
+-------------------------------
+
+A fit submitted with ``stream=True`` declares a LIVE TENANT whose data
+keeps changing.  :meth:`SolverService.submit_update` takes an
+:class:`UpdateRequest` -- append points, replace the set, or pure
+re-fit -- applies the tenant's FIXED preprocessing transform to the
+new points (``preprocess.transform_like``), supersedes the tenant's
+in-flight request (``Status.SUPERSEDED``), and enqueues a re-fit that
+WARM-STARTS from the tenant's last completed saddle state instead of
+the uniform init: ``w`` and the dual momentum carry over, carried
+points keep their dual mass re-placed at the new class offsets, new
+points are seeded at the uniform level and the next MWU normalizer
+round renormalizes each class (``preprocess.repack_warm_duals`` --
+normalization IS the repair, no host-side fix-up pass), and ``u`` is
+recomputed from the carried w on device
+(``engine.warm_packed_state``).  When the updated point count still
+fits the tenant's pow-2 rung, the update re-packs in place and reuses
+the SAME hot chunk executable (the warm helpers are jitted outside the
+chunk trace keys, so the zero-recompile contract holds); an overflow
+jumps one rung (one new bucket, compiled once).  Warm-vs-cold
+iterations-to-gap is gated in ``benchmarks/serve_bench.py``
+(``serve/stream/warm_iters_ratio``).
+
 Shape buckets
 -------------
 
@@ -132,7 +156,7 @@ subclass -- unknown rids keep the historical bare ``KeyError``).
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as dc_replace
 from typing import Any, NamedTuple
 
 import jax
@@ -156,7 +180,11 @@ class FitRequest:
     ``gap_tol > 0`` enables the per-slot duality-gap early stop (the
     request may then finish before ``num_iters``).  ``max_retries``
     bounds how many times a quarantined (non-finite) run is re-admitted
-    before the request fails for good."""
+    before the request fails for good.  ``stream=True`` declares a LIVE
+    TENANT: the service retains the request's preprocessing transform
+    and, at harvest, its final saddle state, so later
+    :class:`UpdateRequest`\\ s can edit the data and warm-start the
+    re-fit (see ``submit_update``)."""
     x: np.ndarray
     y: np.ndarray
     eps: float = 1e-3
@@ -167,6 +195,38 @@ class FitRequest:
     seed: int = 0
     gap_tol: float = 0.0
     max_retries: int = 0
+    stream: bool = False
+
+
+@dataclass
+class UpdateRequest:
+    """One STREAMING UPDATE of a live tenant's problem: edit the data
+    (append new labelled points, replace the whole set, or neither for
+    a pure re-fit) and re-solve -- warm-started from the tenant's last
+    completed saddle state unless ``warm=False`` (the cold-reference
+    knob the benchmarks and parity tests use).
+
+    ``tenant`` is the rid of the original ``stream=True`` fit.  ``x``/
+    ``y`` are new raw points in the tenant's ORIGINAL input space (the
+    tenant's fixed WD transform+scale is applied at intake,
+    ``preprocess.transform_like``); ``mode="append"`` may carry a
+    single class (the tenant already has both), ``mode="replace"``
+    must carry both.  ``nu``/``num_iters``/``gap_tol``/``max_retries``
+    default to the tenant's original configuration when None.
+
+    An accepted update SUPERSEDES the tenant's in-flight request, if
+    any (its ticket terminates with ``Status.SUPERSEDED``); already
+    completed results stay claimable.  The dataset edit is applied at
+    intake and survives even if this update's solve later fails."""
+    tenant: int
+    x: np.ndarray | None = None
+    y: np.ndarray | None = None
+    mode: str = "append"
+    warm: bool = True
+    nu: float | None = None
+    num_iters: int | None = None
+    gap_tol: float | None = None
+    max_retries: int | None = None
 
 
 class FitResult(NamedTuple):
@@ -182,6 +242,54 @@ class FitResult(NamedTuple):
     history: list            # [(iteration, objective)] at chunk marks
 
 
+class _WarmState(NamedTuple):
+    """A tenant's last COMPLETED saddle state, host-retained at harvest
+    (idle-group eviction frees the device lane, so warm state cannot
+    stay slot-resident).  ``log_lam``/``log_lam_prev`` are in the
+    packed layout of the bucket the state was harvested at; only the
+    first ``n1 + n2`` entries are meaningful
+    (``preprocess.repack_warm_duals`` re-places them at admission)."""
+    w: np.ndarray            # (d_bucket,) transformed-space direction
+    log_lam: np.ndarray      # (n_pad_old,) packed log duals
+    log_lam_prev: np.ndarray
+    n1: int                  # class sizes the state was fit at
+    n2: int
+
+
+class _Tenant:
+    """Host-side record of one live streaming tenant: the FIXED
+    preprocessing transform, the CURRENT transformed class matrices
+    (updates edit these at intake), the original request as the config
+    template for derived update fits, and the warm-start state."""
+
+    __slots__ = ("pre", "xp_t", "xm_t", "req", "warm", "live_rid",
+                 "version")
+
+    def __init__(self, pre: Any, xp_t: jax.Array, xm_t: jax.Array,
+                 req: FitRequest):
+        self.pre = pre
+        self.xp_t = xp_t
+        self.xm_t = xm_t
+        self.req = req
+        self.warm: _WarmState | None = None
+        self.live_rid: int | None = None   # in-flight fit/update rid
+        self.version = 0                   # bumped per accepted update
+
+
+class _Admission(NamedTuple):
+    """Everything the admission path needs to (re-)stage one request
+    into a device lane: the transform, the class matrices, the warm
+    state to start from (None = cold uniform init) and the owning
+    streaming tenant (None = plain fit).  Stored per queued rid; a
+    quarantine retry re-stashes the SAME record, so the retry re-enters
+    from the last good warm state."""
+    pre: Any
+    xp_t: jax.Array
+    xm_t: jax.Array
+    warm: _WarmState | None
+    tenant: int | None
+
+
 class _Slot(NamedTuple):
     """Host-side bookkeeping for one RUNNING lane (attached to the
     scheduler ticket as ``ticket.note``)."""
@@ -190,6 +298,8 @@ class _Slot(NamedTuple):
     pre: Any                 # Preprocessed (transform to undo at harvest)
     xp_t: jax.Array          # transformed + bucket-padded class matrices
     xm_t: jax.Array
+    warm: Any                # _WarmState | None (admission's init state)
+    tenant: int | None       # owning streaming tenant, if any
     history: list
 
 
@@ -347,8 +457,10 @@ class SolverService:
         self.max_dim = max_dim              # largest admissible bucket
         self._sched = Scheduler(num_slots=num_slots, policy=policy)
         self._results: dict[int, FitResult | RequestFailure] = {}
-        self._pre_cache: dict[int, Any] = {}
+        self._pre_cache: dict[int, _Admission] = {}
         self._tickets: dict[int, Any] = {}  # rid -> live (non-terminal)
+        self._tenants: dict[int, _Tenant] = {}   # streaming tenants
+        self._rid_tenant: dict[int, int] = {}    # live rid -> tenant id
         self._next_id = 0
 
     @property
@@ -400,7 +512,24 @@ class SolverService:
         saddle.validate_nu(req.nu, n1, n2)
         k_pre, _ = jax.random.split(jax.random.key(req.seed))
         pre = pp.preprocess(xp, xm, k_pre)
-        d_pre = pre.xp.shape[1]
+        self._enqueue(rid, req, n1, n2, pre.xp.shape[1],
+                      priority=priority, deadline=deadline)
+        self._pre_cache[rid] = _Admission(
+            pre=pre, xp_t=pre.xp, xm_t=pre.xm, warm=None,
+            tenant=rid if req.stream else None)
+        if req.stream:
+            self._tenants[rid] = _Tenant(pre, pre.xp, pre.xm, req)
+            self._tenants[rid].live_rid = rid
+            self._rid_tenant[rid] = rid
+        return rid
+
+    def _enqueue(self, rid: int, req: FitRequest, n1: int, n2: int,
+                 d_pre: int, *, priority: int,
+                 deadline: float | None):
+        """Shared tail of ``submit``/``submit_update``: derive the
+        bucket + placement group key and enqueue the ticket.  ONE
+        derivation for both intakes, so an update can never land beside
+        a plain fit under a different key discipline."""
         bucket = pp.bucket_shape(n1 + n2, d_pre)
         # everything that keys the compiled chunk also keys the batch:
         # block_size (shape), project (nu>0) and check_gap (gap_tol>0)
@@ -443,9 +572,175 @@ class SolverService:
                                            mesh=self.mesh,
                                            point_sharded=point_sharded),
             num_slots=group_slots)
-        self._pre_cache[rid] = pre
         self._tickets[rid] = ticket
+        return ticket
+
+    # ---------------------------------------------------------- updates
+    def submit_update(self, ureq: UpdateRequest, *, priority: int = 0,
+                      deadline: float | None = None) -> int:
+        """Edit a live tenant's problem and enqueue its re-fit;
+        returns the new ticket id.
+
+        Validation-first, then commit: shape/finiteness/label checks,
+        nu RE-validation at the post-edit class sizes, and the bucket
+        ladder bound (an update that would overflow ``max_points``
+        fails fast HERE with a ValueError -- it never reaches a device
+        lane, so it cannot masquerade as a quarantine).  Only once the
+        update is accepted does it mutate the tenant: the dataset edit
+        is applied (and survives even if the re-fit later fails), the
+        tenant's in-flight request -- if any -- is SUPERSEDED, and the
+        re-fit is enqueued exactly like any admission.  When the new
+        point count still fits the tenant's current pow-2 rung the
+        update re-packs in place (same bucket, same hot executable);
+        when it does not, the re-fit simply lands on the next rung
+        (whose executable compiles once and is then shared like any
+        bucket's).
+
+        The re-fit WARM-STARTS from the tenant's last completed state
+        (``warm=False`` forces the cold uniform init -- the reference
+        the warm ratio is measured against): append mode carries the
+        old points' dual mass and seeds only the new points at the
+        uniform level; replace mode carries ``w`` (and momentum zero)
+        but resets all dual mass, since the old points no longer exist.
+        A tenant with no completed fit yet falls back to cold."""
+        ten = self._tenants.get(ureq.tenant)
+        if ten is None:
+            raise KeyError(
+                f"unknown streaming tenant {ureq.tenant} (submit the "
+                f"original fit with stream=True)")
+        if ureq.mode not in ("append", "replace"):
+            raise ValueError(
+                f"UpdateRequest.mode must be 'append' or 'replace'; "
+                f"got {ureq.mode!r}")
+        if (ureq.x is None) != (ureq.y is None):
+            raise ValueError(
+                "UpdateRequest.x and .y must be given together "
+                "(both None = pure re-fit of the current data)")
+        xp_t, xm_t = ten.xp_t, ten.xm_t
+        if ureq.x is not None:
+            x = np.asarray(ureq.x)
+            y = np.asarray(ureq.y)
+            if x.ndim != 2:
+                raise ValueError(
+                    f"UpdateRequest.x must be 2-D (m, d); got shape "
+                    f"{x.shape}")
+            if y.shape != (x.shape[0],):
+                raise ValueError(
+                    f"UpdateRequest.y must be shape ({x.shape[0]},) to "
+                    f"match x; got {y.shape}")
+            if not np.isfinite(x).all():
+                raise ValueError(
+                    "UpdateRequest.x contains non-finite values "
+                    "(NaN/Inf)")
+            if not np.isfinite(y.astype(np.float64, copy=False)).all():
+                raise ValueError(
+                    "UpdateRequest.y contains non-finite values "
+                    "(NaN/Inf)")
+            xp_new = x[y > 0]
+            xm_new = x[y < 0]
+            if len(xp_new) + len(xm_new) != len(x):
+                raise ValueError(
+                    "UpdateRequest.y must be +-1 labels; got "
+                    f"{np.unique(y).tolist()}")
+            # the tenant's FIXED transform (raises on a d mismatch)
+            txp = pp.transform_like(ten.pre, xp_new) if len(xp_new) \
+                else ten.xp_t[:0]
+            txm = pp.transform_like(ten.pre, xm_new) if len(xm_new) \
+                else ten.xm_t[:0]
+            if ureq.mode == "append":
+                xp_t = jnp.concatenate([ten.xp_t, txp]) if len(xp_new) \
+                    else ten.xp_t
+                xm_t = jnp.concatenate([ten.xm_t, txm]) if len(xm_new) \
+                    else ten.xm_t
+            else:
+                xp_t, xm_t = txp, txm
+        n1, n2 = int(xp_t.shape[0]), int(xm_t.shape[0])
+        if n1 == 0 or n2 == 0:
+            raise ValueError(
+                "UpdateRequest(mode='replace') must carry both classes "
+                f"(+1 and -1); got {n1} positive and {n2} negative "
+                f"points")
+        nu_eff = ten.req.nu if ureq.nu is None else ureq.nu
+        saddle.validate_nu(nu_eff, n1, n2)   # nu RE-validation post-edit
+        if n1 + n2 > self.max_points:
+            raise ValueError(
+                f"update for tenant {ureq.tenant} grows the problem to "
+                f"{n1 + n2} points, exceeding the service's bucket "
+                f"ladder (max_points={self.max_points})")
+
+        # -- validated: commit the edit and enqueue the re-fit --------
+        rid = self._next_id
+        self._next_id += 1
+        replaced = ureq.mode == "replace" and ureq.x is not None
+        if ten.live_rid is not None:
+            self._supersede(ten.live_rid, rid)
+        ten.xp_t, ten.xm_t = xp_t, xm_t
+        ten.version += 1
+        if replaced and ten.warm is not None:
+            # old points no longer exist: dual mass cannot transfer.
+            # Keep w (same transformed space) but reset the dual
+            # segments to uniform -- n1=n2=0 makes repack_warm_duals
+            # ignore the stale arrays entirely.
+            ten.warm = ten.warm._replace(n1=0, n2=0)
+        req = dc_replace(
+            ten.req,
+            # raw x/y are never read for updates (the transformed
+            # matrices above are authoritative); drop the stale arrays
+            x=None, y=None,
+            nu=nu_eff,
+            num_iters=(ten.req.num_iters if ureq.num_iters is None
+                       else ureq.num_iters),
+            gap_tol=(ten.req.gap_tol if ureq.gap_tol is None
+                     else ureq.gap_tol),
+            max_retries=(ten.req.max_retries if ureq.max_retries is None
+                         else ureq.max_retries),
+            # deterministic per-revision schedule: warm and cold
+            # re-fits of the same revision share it, revisions differ
+            seed=ten.req.seed + 1000003 * ten.version,
+            stream=True)
+        self._enqueue(rid, req, n1, n2, int(xp_t.shape[1]),
+                      priority=priority, deadline=deadline)
+        warm = ten.warm if ureq.warm else None
+        self._pre_cache[rid] = _Admission(
+            pre=ten.pre, xp_t=xp_t, xm_t=xm_t, warm=warm,
+            tenant=ureq.tenant)
+        ten.live_rid = rid
+        self._rid_tenant[rid] = ureq.tenant
         return rid
+
+    def _supersede(self, rid_old: int, rid_new: int) -> None:
+        """Terminate the tenant's stale in-flight request with
+        SUPERSEDED: a queued ticket is removed eagerly, a running one
+        has its lane deactivated and freed (between chunks -- the
+        service is host-driven).  The stale outcome is a claimable
+        :class:`RequestFailure` naming the superseding rid."""
+        ticket = self._tickets.get(rid_old)
+        if ticket is None:
+            return
+        reason = f"superseded by update request {rid_new}"
+        hit = self._sched.cancel_queued(rid_old, Status.SUPERSEDED)
+        if hit is not None:
+            g, t = hit
+            self._record_failure(t, Status.SUPERSEDED, reason)
+            self._sched.evict_idle(g)
+            return
+        for g in self._sched.groups:
+            for lane, t in list(g.slots.items()):
+                if t.rid == rid_old:
+                    g.payload.state = engine.deactivate_slot(
+                        g.payload.state, lane)
+                    self._record_failure(t, Status.SUPERSEDED, reason)
+                    self._sched.release(g, lane, Status.SUPERSEDED)
+                    self._sched.evict_idle(g)
+                    return
+
+    def close_stream(self, tenant: int) -> bool:
+        """Drop a streaming tenant's host-side record (transform,
+        transformed matrices, warm state).  An in-flight re-fit keeps
+        running and its result stays claimable; it just no longer
+        updates warm state at harvest.  Returns False on unknown
+        tenants."""
+        return self._tenants.pop(tenant, None) is not None
 
     # --------------------------------------------------------- admission
     def _admit(self, group) -> None:
@@ -455,8 +750,8 @@ class SolverService:
         n_pad, d_pad = batch.bucket
         for lane, ticket in self._sched.admit(group):
             req = ticket.payload
-            pre = self._pre_cache.pop(ticket.rid)
-            xp_t, xm_t = pre.xp, pre.xm
+            adm = self._pre_cache.pop(ticket.rid)
+            xp_t, xm_t = adm.xp_t, adm.xm_t
             # preprocess() already padded d to a power of two, so the
             # request's dimensionality IS the batch's d rung
             assert xp_t.shape[1] == d_pad, (xp_t.shape, batch.bucket)
@@ -473,26 +768,55 @@ class SolverService:
 
             batch.x_t, batch.sign = _write_slot_data(
                 batch.x_t, batch.sign, lane, pts.x_t, pts.sign)
+            if adm.warm is not None:
+                # WARM admission: re-place the carried dual segments at
+                # the new class offsets (appended points seeded at the
+                # uniform level; the next MWU normalizer round
+                # renormalizes each class -- no host-side repair), and
+                # recompute u from the carried w on device.  Both
+                # helpers are jitted OUTSIDE the chunk trace keys, so
+                # the hot executables stay zero-recompile.
+                lam = pp.repack_warm_duals(
+                    adm.warm.log_lam, adm.warm.n1, adm.warm.n2,
+                    n1, n2, n_pad)
+                prev = pp.repack_warm_duals(
+                    adm.warm.log_lam_prev, adm.warm.n1, adm.warm.n2,
+                    n1, n2, n_pad)
+                pstate = engine.warm_packed_state(
+                    pts.x_t, jnp.asarray(adm.warm.w),
+                    jnp.asarray(lam), jnp.asarray(prev))
+            else:
+                pstate = engine.init_packed_state(pts.sign, n1, n2,
+                                                  d_pad)
             batch.state = engine.admit_into_slot(
-                batch.state, lane,
-                engine.init_packed_state(pts.sign, n1, n2, d_pad),
+                batch.state, lane, pstate,
                 jax.random.key(req.seed), num_iters)
             row = engine.slot_params_row(params, req.gap_tol)
             for f in engine.SlotParams._fields:
                 getattr(batch.sp, f)[lane] = getattr(row, f)
             batch.sp_dev = None                 # refresh device mirror
-            ticket.note = _Slot(request_id=ticket.rid, req=req, pre=pre,
-                                xp_t=xp_t, xm_t=xm_t, history=[])
+            ticket.note = _Slot(request_id=ticket.rid, req=req,
+                                pre=adm.pre, xp_t=xp_t, xm_t=xm_t,
+                                warm=adm.warm, tenant=adm.tenant,
+                                history=[])
 
     # ----------------------------------------------------------- failure
     def _record_failure(self, ticket, status: Status, reason: str) -> None:
         """Terminal non-result: structured record claimable via
-        ``result(rid)``, live bookkeeping dropped."""
+        ``result(rid)``, live bookkeeping dropped.  A streaming
+        tenant's failed/superseded re-fit clears the tenant's live-rid
+        (the tenant itself, its dataset and its last good warm state
+        all survive -- the next update retries from there)."""
         self._results[ticket.rid] = RequestFailure(
             request_id=ticket.rid, status=status, reason=reason,
             attempts=ticket.attempts)
         self._pre_cache.pop(ticket.rid, None)
         self._tickets.pop(ticket.rid, None)
+        ten_id = self._rid_tenant.pop(ticket.rid, None)
+        if ten_id is not None:
+            ten = self._tenants.get(ten_id)
+            if ten is not None and ten.live_rid == ticket.rid:
+                ten.live_rid = None
 
     # ----------------------------------------------------------- harvest
     def _harvest(self, group, obj, healthy) -> list[FitResult]:
@@ -515,7 +839,13 @@ class SolverService:
                 # (fresh arrival = backoff ordering); past it, the
                 # request fails with a structured record.
                 if ticket.attempts <= ticket.payload.max_retries:
-                    self._pre_cache[ticket.rid] = slot.pre
+                    # re-stash the FULL admission record: the retry
+                    # re-enters from the same (last good) warm state
+                    # the poisoned attempt started from, so a clean
+                    # retry is bit-for-bit a clean first run
+                    self._pre_cache[ticket.rid] = _Admission(
+                        pre=slot.pre, xp_t=slot.xp_t, xm_t=slot.xm_t,
+                        warm=slot.warm, tenant=slot.tenant)
                     self._sched.resubmit(group, lane, ticket)
                 else:
                     self._record_failure(
@@ -531,6 +861,21 @@ class SolverService:
             lam = np.asarray(jax.device_get(batch.state.log_lam[lane]))
             n1 = slot.xp_t.shape[0]
             n2 = slot.xm_t.shape[0]
+            if slot.tenant is not None:
+                # STREAMING harvest: host-retain the final saddle state
+                # (w + dual momentum; lam is already here) BEFORE the
+                # lane is freed -- idle-group eviction drops the device
+                # buffers, so warm state cannot stay slot-resident.
+                ten = self._tenants.get(slot.tenant)
+                if ten is not None and ten.live_rid == slot.request_id:
+                    w_h, prev_h = map(np.asarray, jax.device_get(
+                        (batch.state.w[lane],
+                         batch.state.log_lam_prev[lane])))
+                    ten.warm = _WarmState(
+                        w=w_h, log_lam=lam, log_lam_prev=prev_h,
+                        n1=n1, n2=n2)
+                    ten.live_rid = None
+                self._rid_tenant.pop(slot.request_id, None)
             eta = jnp.exp(jnp.asarray(lam[:n1]))
             xi = jnp.exp(jnp.asarray(lam[n1:n1 + n2]))
             w, b, objective, margin, _ = svm_mod.recover_hyperplane(

@@ -315,4 +315,4 @@ def test_gate_subprocess_green(tmp_path):
     report = json.loads(out.read_text())
     assert report["unsuppressed_count"] == 0
     assert len(report["kernel_cases"]) > 100
-    assert len(report["hlo_targets"]) == 6
+    assert len(report["hlo_targets"]) == 9

@@ -22,7 +22,8 @@ from repro.serve.faults import Fault, FaultInjector, FaultPlan
 from repro.serve.lm_service import LMService
 from repro.serve.scheduler import (RequestFailure, ResultNotReady,
                                    Scheduler, Status)
-from repro.serve.solver_service import FitRequest, SolverService
+from repro.serve.solver_service import (FitRequest, SolverService,
+                                        UpdateRequest)
 
 pytestmark = [pytest.mark.faults, pytest.mark.serve]
 
@@ -310,6 +311,64 @@ def test_retry_budget_exhausted_fails_structured(two_problems):
     svc2 = SolverService(num_slots=2, chunk_steps=C, fault_injector=inj2)
     with pytest.raises(RuntimeError, match="FAILED"):
         svc2.fit(ds1.x, ds1.y, num_iters=C, seed=1)
+
+
+def _stream_update_run(two_problems, injector):
+    """One streaming workload: a tenant's initial fit completes, then
+    its warm UPDATE round shares the batch with a bystander request.
+    rids are deterministic (0 = initial fit, 1 = update, 2 =
+    bystander), so a plan poisoning rid 1 hits the update mid-round."""
+    ds1, ds2 = two_problems
+    extra = synthetic.blobs(2, 2, 16, gap=1.2, spread=0.15, seed=21)
+    svc = SolverService(num_slots=2, chunk_steps=C,
+                        fault_injector=injector)
+    rt = svc.submit(FitRequest(x=ds1.x, y=ds1.y, num_iters=2 * C,
+                               seed=1, stream=True))
+    svc.run()                                # warm state harvested
+    ru = svc.submit_update(UpdateRequest(tenant=rt, x=extra.x,
+                                         y=extra.y, num_iters=2 * C,
+                                         max_retries=1))
+    rb = svc.submit(FitRequest(x=ds2.x, y=ds2.y, num_iters=2 * C,
+                               seed=9))
+    res = svc.run()
+    return res[ru], res[rb]
+
+
+def test_update_round_poison_retries_from_warm_state(two_problems):
+    """Poison mid-update-round: the update's lane is quarantined and
+    the retry RE-ENTERS FROM THE SAME WARM STATE (the admission stash
+    is restored at quarantine, warm state included), completing
+    bit-for-bit equal to a fault-free warm update; the batch-mate is
+    bit-for-bit unchanged."""
+    clean_u, clean_b = _stream_update_run(two_problems, None)
+    inj = FaultInjector(FaultPlan(
+        seed=0, faults=(Fault("poison", rid=1, at_chunk=0),)))
+    got_u, got_b = _stream_update_run(two_problems, inj)
+    assert not isinstance(got_u, RequestFailure)
+    _assert_same_result(got_u, clean_u)
+    _assert_same_result(got_b, clean_b)
+    assert len(inj.fired) == 1
+
+
+def test_update_round_poison_budget_exhausted_keeps_tenant(two_problems):
+    """An update whose retries are exhausted FAILS structured -- and
+    the tenant survives it: the dataset edit persists and the next
+    update (which re-warms from the last GOOD completed state) still
+    runs."""
+    ds1, _ = two_problems
+    extra = synthetic.blobs(2, 2, 16, gap=1.2, spread=0.15, seed=21)
+    inj = FaultInjector(FaultPlan(
+        seed=0, faults=(Fault("poison", rid=1, at_chunk=0),)))
+    svc = SolverService(num_slots=2, chunk_steps=C, fault_injector=inj)
+    rt = svc.submit(FitRequest(x=ds1.x, y=ds1.y, num_iters=2 * C,
+                               seed=1, stream=True))
+    svc.run()
+    ru = svc.submit_update(UpdateRequest(tenant=rt, x=extra.x,
+                                         y=extra.y, num_iters=2 * C))
+    f = svc.run()[ru]                        # max_retries inherited: 0
+    assert isinstance(f, RequestFailure) and f.status is Status.FAILED
+    r2 = svc.submit_update(UpdateRequest(tenant=rt, num_iters=2 * C))
+    assert not isinstance(svc.run()[r2], RequestFailure)
 
 
 # ----------------------------------------------------------- deadlines

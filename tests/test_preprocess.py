@@ -113,3 +113,49 @@ def test_bucketed_solve_matches_plain_optimum():
     w = np.asarray(buck.state.w)
     np.testing.assert_array_equal(w[8:], 0.0)      # inert padding coords
     assert abs(plain.history[-1][1] - buck.history[-1][1]) < 5e-3
+
+
+def test_transform_like_matches_original_transform():
+    """The streaming-update intake path: transform_like applied to the
+    ORIGINAL raw points reproduces the preprocess outputs exactly (same
+    sign diagonal, same pinned scale, same coordinate padding)."""
+    import pytest
+    rng = np.random.default_rng(7)
+    xp = rng.normal(size=(7, 10)).astype(np.float32)
+    xm = rng.normal(size=(5, 10)).astype(np.float32)
+    pre = pp.preprocess(jnp.asarray(xp), jnp.asarray(xm),
+                        jax.random.key(3))
+    np.testing.assert_allclose(np.asarray(pp.transform_like(pre, xp)),
+                               np.asarray(pre.xp), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(pp.transform_like(pre, xm)),
+                               np.asarray(pre.xm), atol=1e-6)
+    with pytest.raises(ValueError, match="d_orig"):
+        pp.transform_like(pre, xp[:, :4])          # wrong input dim
+    with pytest.raises(ValueError, match="d_orig"):
+        pp.transform_like(pre, xp[0])              # not 2-D
+
+
+def test_repack_warm_duals_layout_and_uniform_seed():
+    """Class segments are RE-PLACED at their new offsets (appending to
+    eta shifts the whole xi block), carried entries keep their old log
+    weights, new entries sit at the new uniform level, padding at
+    NEG_INF."""
+    import math
+
+    import pytest
+
+    from repro.core.engine import NEG_INF
+    lam = np.array([-1.0, -2.0, -3.0, -4.0, -5.0], np.float32)
+    out = pp.repack_warm_duals(lam, 2, 3, 4, 3, 16)
+    np.testing.assert_array_equal(out[:2], lam[:2])          # carried eta
+    np.testing.assert_allclose(out[2:4], -math.log(4))       # new eta
+    np.testing.assert_array_equal(out[4:7], lam[2:5])        # shifted xi
+    np.testing.assert_array_equal(out[7:], np.float32(NEG_INF))  # pad
+    # n_old == 0 ignores the old vector: the replace-mode uniform reset
+    uni = pp.repack_warm_duals(lam, 0, 0, 4, 3, 8)
+    np.testing.assert_allclose(uni[:4], -math.log(4))
+    np.testing.assert_allclose(uni[4:7], -math.log(3))
+    with pytest.raises(ValueError, match="within new"):
+        pp.repack_warm_duals(lam, 2, 3, 1, 3, 16)  # class shrank
+    with pytest.raises(ValueError, match="n_pad_new"):
+        pp.repack_warm_duals(lam, 2, 3, 9, 8, 16)  # overflows the pad

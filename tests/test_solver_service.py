@@ -11,7 +11,9 @@ from repro.core import preprocess as pp
 from repro.core import saddle
 from repro.core.svm import recover_hyperplane, split_classes
 from repro.data import synthetic
-from repro.serve.solver_service import FitRequest, SolverService
+from repro.serve.scheduler import RequestFailure, Status
+from repro.serve.solver_service import (FitRequest, SolverService,
+                                        UpdateRequest)
 
 pytestmark = pytest.mark.serve
 
@@ -135,3 +137,245 @@ def test_infeasible_nu_rejected_at_submit(two_problems):
     svc = SolverService(num_slots=2, chunk_steps=C)
     with pytest.raises(ValueError, match="infeasible"):
         svc.submit(FitRequest(x=ds1.x, y=ds1.y, nu=1.0 / 200))
+
+
+# ================================================================
+# Streaming updates (warm starts)
+# ================================================================
+#
+# Warm-vs-cold parity requires TRUE convergence: unlike the
+# service-vs-solo pairs above (bit-identical trajectories at the same
+# seed), a warm and a cold update follow DIFFERENT trajectories, so
+# they only agree where the solver's fixed point is well attracting.
+# Two regimes provide that:
+#
+#  * nu = 0 at eps = 1e-2: the larger entropy smoothing makes the MWU
+#    fixed point strongly attracting -- warm and cold land ~2e-6 apart
+#    in w.  (At the default eps=1e-3 the f32 last iterate freezes at
+#    trajectory-dependent points ~4e-5 apart, and two COLD solves at
+#    different seeds disagree by as much -- parity there would pin
+#    solver noise, not the warm start.)
+#  * nu = 1/min(n1, n2): the capped simplex degenerates to the single
+#    point with every dual AT the cap, so the projection is active
+#    every round and the optimum is unique -- warm and cold agree to
+#    f32 exactness.  The update re-pins nu = 1/n_new, exercising the
+#    per-update nu override.
+
+def _stream_fit_then_update(ds, extra, *, nu0, nu1, iters, eps, warm,
+                            seed=5, chunk=512):
+    svc = SolverService(num_slots=2, chunk_steps=chunk)
+    rid = svc.submit(FitRequest(x=ds.x, y=ds.y, seed=seed, nu=nu0,
+                                eps=eps, num_iters=iters, stream=True))
+    svc.run()
+    ru = svc.submit_update(UpdateRequest(tenant=rid, x=extra.x,
+                                         y=extra.y, warm=warm, nu=nu1,
+                                         num_iters=iters))
+    return svc.run()[ru], svc, rid
+
+
+@pytest.mark.parametrize("case", ["nu0", "nu0_jump", "nu_pin",
+                                  "nu_pin_jump"])
+def test_streaming_warm_parity(case):
+    """A warm-started update matches a cold re-fit of the SAME edited
+    problem within the serving tolerance (atol 1e-5), for nu=0 and
+    nu>0, in-bucket AND across a pow-2 rung jump (the *_jump cases
+    start at 120+ points on the 128 rung and the append crosses into
+    the 256 rung)."""
+    if case in ("nu0", "nu_pin"):
+        ds = synthetic.blobs(20 if case == "nu0" else 24, 24, 8,
+                             gap=1.5, spread=0.12, seed=1)
+        extra = synthetic.blobs(2, 2, 8, gap=1.5, spread=0.12, seed=7)
+    else:
+        ds = synthetic.blobs(60, 64, 8, gap=1.5, spread=0.12, seed=1)
+        extra = synthetic.blobs(3, 3, 8, gap=1.5, spread=0.12, seed=7)
+        assert pp.bucket_length(len(ds.x)) == 128            # rung 0
+        assert pp.bucket_length(len(ds.x) + len(extra.x)) == 256
+    cfg = {
+        "nu0": dict(nu0=0.0, nu1=None, iters=40_000, eps=1e-2),
+        "nu0_jump": dict(nu0=0.0, nu1=None, iters=60_000, eps=1e-2),
+        "nu_pin": dict(nu0=1 / 24, nu1=1 / 26, iters=20_000, eps=1e-3),
+        "nu_pin_jump": dict(nu0=1 / 60, nu1=1 / 63, iters=30_000,
+                            eps=1e-2),
+    }[case]
+    res_w, _, _ = _stream_fit_then_update(ds, extra, warm=True, **cfg)
+    res_c, _, _ = _stream_fit_then_update(ds, extra, warm=False, **cfg)
+    np.testing.assert_allclose(res_w.w, res_c.w, atol=1e-5)
+    np.testing.assert_allclose(res_w.b, res_c.b, atol=1e-5)
+    # both ran the update round's own full budget (t was reset)
+    assert res_w.iterations == res_c.iterations == cfg["iters"]
+
+
+def test_streaming_update_zero_recompile_contract():
+    """trace_counts is UNCHANGED across update rounds: an in-bucket
+    re-pack adds no trace immediately; a rung jump traces its (warmed)
+    target-rung executable once and every later round -- in either
+    rung -- adds nothing.  Also: an update landing EXACTLY on the
+    bucket boundary stays in its rung."""
+    ds = synthetic.blobs(60, 64, 8, gap=1.5, spread=0.12, seed=1)
+    svc = SolverService(num_slots=2, chunk_steps=C)
+
+    def upd(rid, m, seed):
+        ex = synthetic.blobs(m, m, 8, gap=1.5, spread=0.12, seed=seed)
+        ru = svc.submit_update(UpdateRequest(tenant=rid, x=ex.x,
+                                             y=ex.y, num_iters=2 * C))
+        res = svc.run()[ru]
+        assert not isinstance(res, RequestFailure)
+        return ru
+
+    rid = svc.submit(FitRequest(x=ds.x, y=ds.y, seed=3, num_iters=2 * C,
+                                stream=True))
+    svc.run()
+    snap0 = dict(engine.trace_counts)
+    upd(rid, 1, 11)                     # 124 + 2 = 126: in-bucket
+    upd(rid, 1, 12)                     # 128 EXACTLY: boundary, no jump
+    assert dict(engine.trace_counts) == snap0, \
+        "in-bucket update rounds must not trace anything new"
+    upd(rid, 1, 13)                     # 130: jumps to the 256 rung
+    snap1 = dict(engine.trace_counts)
+    upd(rid, 2, 14)                     # post-jump rounds: pinned again
+    upd(rid, 2, 15)
+    assert dict(engine.trace_counts) == snap1, \
+        "post-rung-jump update rounds must not trace anything new"
+
+
+def test_streaming_warm_update_converges_faster():
+    """The tentpole's point: with a duality-gap stop, a warm-started
+    small append converges in far fewer iterations than a cold re-fit
+    of the same edited problem."""
+    ds = synthetic.blobs(20, 24, 8, gap=1.5, spread=0.12, seed=1)
+    extra = synthetic.blobs(1, 1, 8, gap=1.5, spread=0.12, seed=7)
+    iters = {}
+    for warm in (True, False):
+        svc = SolverService(num_slots=2, chunk_steps=256)
+        rid = svc.submit(FitRequest(x=ds.x, y=ds.y, seed=5,
+                                    num_iters=40_960, gap_tol=0.05,
+                                    stream=True))
+        svc.run()
+        ru = svc.submit_update(UpdateRequest(tenant=rid, x=extra.x,
+                                             y=extra.y, warm=warm))
+        iters[warm] = svc.run()[ru].iterations
+    assert iters[False] > 2 * iters[True], iters
+    assert iters[True] < 40_960 and iters[False] < 40_960, \
+        f"gap stop never fired, ratio is meaningless: {iters}"
+
+
+def test_update_overflowing_ladder_fails_fast(two_problems):
+    """An update that would overflow the service's bucket ladder is a
+    fail-fast ValueError NAMING max_points at submit_update -- nothing
+    is enqueued, no lane is quarantined, and the tenant keeps serving
+    (its dataset unchanged by the rejected edit)."""
+    ds1, _ = two_problems                      # 90 points, d=16
+    svc = SolverService(num_slots=2, chunk_steps=C, max_points=128)
+    rid = svc.submit(FitRequest(x=ds1.x, y=ds1.y, seed=1,
+                                num_iters=2 * C, stream=True))
+    svc.run()
+    big = synthetic.blobs(30, 30, 16, gap=1.2, spread=0.15, seed=9)
+    with pytest.raises(ValueError, match="max_points"):
+        svc.submit_update(UpdateRequest(tenant=rid, x=big.x, y=big.y))
+    assert not svc._sched.has_work()           # nothing enqueued
+    small = synthetic.blobs(2, 2, 16, gap=1.2, spread=0.15, seed=9)
+    ru = svc.submit_update(UpdateRequest(tenant=rid, x=small.x,
+                                         y=small.y, num_iters=2 * C))
+    assert not isinstance(svc.run()[ru], RequestFailure)
+
+
+def test_update_nu_refeasibility(two_problems):
+    """nu feasibility is RE-validated against the post-edit class
+    sizes: an infeasible per-update override fails fast, and a replace
+    that shrinks a class under the tenant's inherited cap fails fast;
+    the rejected edit leaves the dataset untouched."""
+    ds1, _ = two_problems                      # (40, 50)
+    svc = SolverService(num_slots=2, chunk_steps=C)
+    rid = svc.submit(FitRequest(x=ds1.x, y=ds1.y, seed=1, num_iters=C,
+                                nu=1.0 / (0.85 * 40), stream=True))
+    svc.run()
+    ex = synthetic.blobs(2, 2, 16, gap=1.2, spread=0.15, seed=9)
+    with pytest.raises(ValueError, match="infeasible"):
+        svc.submit_update(UpdateRequest(tenant=rid, x=ex.x, y=ex.y,
+                                        nu=1.0 / 200))
+    tiny = synthetic.blobs(5, 5, 16, gap=1.2, spread=0.15, seed=9)
+    with pytest.raises(ValueError, match="infeasible"):
+        # inherited nu ~= 1/34 needs min class >= 34; replace gives 5
+        svc.submit_update(UpdateRequest(tenant=rid, x=tiny.x, y=tiny.y,
+                                        mode="replace"))
+    assert not svc._sched.has_work()
+    # the tenant still serves a pure warm re-fit of its ORIGINAL data
+    ru = svc.submit_update(UpdateRequest(tenant=rid, num_iters=C))
+    assert not isinstance(svc.run()[ru], RequestFailure)
+
+
+def test_update_supersedes_inflight_request(two_problems):
+    """A new update SUPERSEDES the tenant's in-flight request --
+    queued or already running -- with a terminal SUPERSEDED status
+    whose failure record names the superseding rid; the newest
+    revision completes normally."""
+    ds1, _ = two_problems
+    ex = synthetic.blobs(2, 2, 16, gap=1.2, spread=0.15, seed=9)
+    svc = SolverService(num_slots=1, chunk_steps=C)
+    rid = svc.submit(FitRequest(x=ds1.x, y=ds1.y, seed=1,
+                                num_iters=4 * C, stream=True))
+    # still QUEUED (never stepped) -> superseded from the queue
+    r2 = svc.submit_update(UpdateRequest(tenant=rid, x=ex.x, y=ex.y,
+                                         num_iters=4 * C))
+    assert svc.status(rid) is Status.SUPERSEDED
+    f = svc.result(rid)
+    assert isinstance(f, RequestFailure)
+    assert f.status is Status.SUPERSEDED and f.attempts == 0
+    assert f"superseded by update request {r2}" in f.reason
+    # r2 RUNNING mid-budget -> superseded from its lane
+    assert svc.step() == []
+    assert svc.status(r2) is Status.RUNNING
+    r3 = svc.submit_update(UpdateRequest(tenant=rid, num_iters=C))
+    assert svc.status(r2) is Status.SUPERSEDED
+    assert f"superseded by update request {r3}" in svc.result(r2).reason
+    res = svc.run()[r3]
+    assert not isinstance(res, RequestFailure)
+    assert res.iterations == C                 # newest revision ran
+
+
+def test_update_unknown_tenant_and_close_stream(two_problems):
+    ds1, _ = two_problems
+    svc = SolverService(num_slots=2, chunk_steps=C)
+    with pytest.raises(KeyError, match="tenant"):
+        svc.submit_update(UpdateRequest(tenant=123))
+    # a NON-stream fit is not a tenant
+    rid = svc.submit(FitRequest(x=ds1.x, y=ds1.y, seed=1, num_iters=C))
+    svc.run()
+    with pytest.raises(KeyError, match="tenant"):
+        svc.submit_update(UpdateRequest(tenant=rid))
+    # close_stream forgets the tenant's retained transform + state
+    rs = svc.submit(FitRequest(x=ds1.x, y=ds1.y, seed=1, num_iters=C,
+                               stream=True))
+    svc.run()
+    assert svc.close_stream(rs)
+    assert not svc.close_stream(rs)
+    with pytest.raises(KeyError, match="tenant"):
+        svc.submit_update(UpdateRequest(tenant=rs))
+
+
+def test_replace_mode_resets_to_new_problem():
+    """mode="replace" swaps the whole dataset: the re-fit (carried w,
+    dual mass reset to uniform) converges to the NEW problem's optimum
+    under the tenant's FIXED transform -- matching a cold replace on an
+    identical tenant (NOT a fresh fit of the new data: that would
+    re-derive scale/signs and solve a differently-conditioned problem;
+    pinning the transform is the warm-start contract).  The replaced
+    problem still classifies its own data perfectly."""
+    ds_a = synthetic.blobs(20, 24, 8, gap=1.5, spread=0.12, seed=1)
+    ds_b = synthetic.blobs(22, 20, 8, gap=1.5, spread=0.12, seed=4)
+    res = {}
+    for warm in (True, False):
+        svc = SolverService(num_slots=2, chunk_steps=512)
+        rid = svc.submit(FitRequest(x=ds_a.x, y=ds_a.y, seed=5,
+                                    eps=1e-2, num_iters=40_000,
+                                    stream=True))
+        svc.run()
+        ru = svc.submit_update(UpdateRequest(tenant=rid, x=ds_b.x,
+                                             y=ds_b.y, mode="replace",
+                                             warm=warm))
+        res[warm] = svc.run()[ru]
+    np.testing.assert_allclose(res[True].w, res[False].w, atol=1e-5)
+    np.testing.assert_allclose(res[True].b, res[False].b, atol=1e-5)
+    got = res[True]
+    acc = np.mean(np.where(ds_b.x @ got.w - got.b >= 0, 1, -1) == ds_b.y)
+    assert acc == 1.0
